@@ -1,0 +1,166 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (derived = Mops/s for ADT
+workloads; see each section).  Figures:
+
+  * fig8 a–c   — dictionary workloads, Uruv vs the flat-chunk baseline
+                 (the paper's LF-B+Tree/OpenBw-Tree role), sweeping the
+                 announce width (the paper's thread-count axis).
+  * fig9 a–f   — range-query mixes, Uruv MVCC snapshot scans vs
+                 validate-retry multi-scan (the paper's VCAS-BST role).
+  * table_complexity — measured wait-free bound: passes per op vs
+                 conflict concentration (the paper's m = f(I_C) bound).
+  * kernels    — Uruv hot-path kernels, XLA path (CPU relative numbers).
+
+Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks import workloads as W
+from repro.core import batch as B
+from repro.core import store as S
+
+WIDTHS = [64, 256, 1024, 4096]
+
+
+def emit(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.2f},{derived}", flush=True)
+
+
+def fig8(quick: bool = False) -> None:
+    rng = np.random.default_rng(0)
+    uruv = W.prefill_uruv(rng)
+    flat = W.prefill_flat(rng)
+    widths = WIDTHS[:2] if quick else WIDTHS
+    for name, w in W.FIG8.items():
+        for width in widths:
+            uruv, sec = W.run_uruv(uruv, rng, w, width)
+            emit(f"{name}_uruv_w{width}", sec * 1e6,
+                 f"{width/sec/1e6:.3f}Mops/s")
+            flat, fsec = W.run_flat(flat, rng, w, width)
+            emit(f"{name}_flatbase_w{width}", fsec * 1e6,
+                 f"{width/fsec/1e6:.3f}Mops/s")
+
+
+def fig9(quick: bool = False) -> None:
+    rng = np.random.default_rng(1)
+    uruv = W.prefill_uruv(rng)
+    flat = W.prefill_flat(rng)
+    widths = [1024] if quick else [1024, 4096]
+    figs = dict(list(W.FIG9.items())[:2]) if quick else W.FIG9
+    for name, w in figs.items():
+        for width in widths:
+            uruv, sec = W.run_uruv(uruv, rng, w, width)
+            emit(f"{name}_uruv_w{width}", sec * 1e6,
+                 f"{width/sec/1e6:.3f}Mops/s")
+            flat, fsec = W.run_flat(flat, rng, w, width)
+            emit(f"{name}_validate_retry_w{width}", fsec * 1e6,
+                 f"{width/fsec/1e6:.3f}Mops/s")
+
+
+def table_complexity() -> None:
+    """Wait-free bound: slow-path rounds vs conflict concentration.
+
+    The paper bounds restarts by m = min(f + s*t, I_C) (interval
+    contention).  The batch analogue: a prefilled store receives 1024 NEW
+    keys concentrated in a span of the key space — the narrower the span,
+    the more structural inserts collide on the same leaves and the more
+    bounded help-rounds the combining layer runs.  Wide spans take the
+    fast path (1 round)."""
+    rng = np.random.default_rng(2)
+    base_keys = rng.choice(1_000_000, 100_000, replace=False) \
+        .astype(np.int32) * 2           # even keys prefilled
+    for span in (1_000_000, 65_536, 8_192, 2_048):
+        st = S.create(S.UruvConfig(leaf_cap=16, max_leaves=1 << 15,
+                                   max_versions=1 << 19))
+        for i in range(0, 100_000, 4096):
+            st, _ = B.apply_updates(st, base_keys[i:i+4096],
+                                    base_keys[i:i+4096])
+        new = (rng.choice(span // 2, 1024, replace=False)
+               .astype(np.int32) * 2 + 1)      # odd keys: all new
+        calls = {"n": 0}
+        orig = S.bulk_update
+
+        def counting(st_, k, v):
+            calls["n"] += 1
+            return orig(st_, k, v)
+
+        S.bulk_update = counting
+        try:
+            st, _ = B.apply_updates(st, new, new)
+        finally:
+            S.bulk_update = orig
+        emit(f"complexity_span{span}_passes", float(calls["n"]),
+             f"{calls['n']}rounds")
+
+
+def kernels(quick: bool = False) -> None:
+    rng = np.random.default_rng(3)
+    st = W.prefill_uruv(rng)
+    q = rng.integers(0, W.UNIVERSE, 4096).astype(np.int32)
+    sec = W.timed(lambda: S.bulk_lookup(
+        st, jnp.asarray(q),
+        jnp.asarray(int(st.ts), jnp.int32)).block_until_ready())
+    emit("kernel_locate_resolve_4096", sec * 1e6,
+         f"{4096/sec/1e6:.2f}Mlookups/s")
+    ts = int(st.ts)
+    sec = W.timed(lambda: S.range_query(
+        st, 100_000, 101_000, ts, max_scan_leaves=64,
+        max_results=2048)[0].block_until_ready())
+    emit("kernel_range1k_snapshot", sec * 1e6, "1scan")
+
+
+def roofline_summary() -> None:
+    """Dry-run roofline: dominant term for the hillclimbed cells (full
+    table in EXPERIMENTS.md; reads experiments/dryrun artifacts)."""
+    from pathlib import Path
+    from repro.launch.roofline import analyze_cell
+
+    cells = [
+        ("llama3_2_1b", "decode_32k", "single"),
+        ("olmoe_1b_7b", "train_4k", "single"),
+        ("internvl2_76b", "train_4k", "single"),
+    ]
+    base = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+    for a, s, m in cells:
+        p = base / f"{a}__{s}__{m}.json"
+        if not p.exists():
+            continue
+        r = analyze_cell(p)
+        if r.get("status") != "OK":
+            continue
+        step = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        emit(f"roofline_{a}_{s}", step * 1e6,
+             f"{r['bottleneck']}-bound;mfu={r['roofline_fraction_mfu']:.3f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="fig8|fig9|complexity|kernels|roofline")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    sections = {
+        "fig8": lambda: fig8(args.quick),
+        "fig9": lambda: fig9(args.quick),
+        "complexity": table_complexity,
+        "kernels": lambda: kernels(args.quick),
+        "roofline": roofline_summary,
+    }
+    if args.only:
+        sections[args.only]()
+        return
+    for fn in sections.values():
+        fn()
+
+
+if __name__ == "__main__":
+    main()

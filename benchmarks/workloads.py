@@ -1,0 +1,155 @@
+"""Paper workload generators + timing helpers (Sec 6 benchmark protocol).
+
+The paper sweeps thread count on a 40-core Power9; the TPU-native analogue
+of "concurrent threads" is the announce-array width (ops per wait-free
+batch pass) — DESIGN.md Sec 2.  We report throughput (Mops/s) vs width.
+
+Protocol mirrors the paper: prefill with uniform keys from a universe,
+uniform op mix, average of the last runs after warmup.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import baseline as BL
+from repro.core import batch as B
+from repro.core import store as S
+from repro.core.ref import KEY_MAX, TOMBSTONE
+
+
+@dataclasses.dataclass
+class Workload:
+    read: float
+    update: float          # split evenly insert/delete
+    range_q: float = 0.0
+    range_size: int = 1000
+
+
+# paper figures
+FIG8 = {
+    "fig8a_read100": Workload(1.0, 0.0),
+    "fig8b_read95_upd5": Workload(0.95, 0.05),
+    "fig8c_read50_upd50": Workload(0.5, 0.5),
+}
+FIG9 = {
+    "fig9a_r94_u5_rq1": Workload(0.94, 0.05, 0.01),
+    "fig9b_r90_u5_rq5": Workload(0.90, 0.05, 0.05),
+    "fig9c_r85_u5_rq10": Workload(0.85, 0.05, 0.10),
+    "fig9d_r49_u50_rq1": Workload(0.49, 0.50, 0.01),
+    "fig9e_r45_u50_rq5": Workload(0.45, 0.50, 0.05),
+    "fig9f_r40_u50_rq10": Workload(0.40, 0.50, 0.10),
+}
+
+UNIVERSE = 2_000_000
+PREFILL = 200_000
+STORE_CFG = S.UruvConfig(leaf_cap=64, max_leaves=1 << 14,
+                         max_versions=1 << 21, max_chain=64)
+
+
+def timed(fn: Callable[[], None], repeats: int = 5, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return float(np.mean(ts[: max(1, len(ts) - 1)]))   # drop worst (paper: outliers)
+
+
+def prefill_uruv(rng) -> S.UruvStore:
+    st = S.create(STORE_CFG)
+    keys = rng.choice(UNIVERSE, PREFILL, replace=False).astype(np.int32)
+    for i in range(0, PREFILL, 4096):
+        st, _ = B.apply_updates(st, keys[i:i+4096],
+                                keys[i:i+4096] % 1000 + 1)
+    return st
+
+
+def prefill_flat(rng) -> BL.FlatStore:
+    st = BL.create(1 << 19)
+    keys = rng.choice(UNIVERSE, PREFILL, replace=False).astype(np.int32)
+    st = BL.bulk_update(st, jnp.asarray(keys),
+                        jnp.asarray(keys % 1000 + 1))
+    return st
+
+
+def op_batch(rng, w: Workload, width: int):
+    """(lookup_keys, update_keys, update_vals, n_rq) for one announce pass."""
+    r = rng.random(width)
+    keys = rng.integers(0, UNIVERSE, width).astype(np.int32)
+    is_read = r < w.read
+    is_upd = (r >= w.read) & (r < w.read + w.update)
+    lookup = np.where(is_read, keys, KEY_MAX).astype(np.int32)
+    upd_k = np.where(is_upd, keys, KEY_MAX).astype(np.int32)
+    dels = rng.random(width) < 0.5
+    upd_v = np.where(dels, TOMBSTONE, keys % 1000 + 1).astype(np.int32)
+    n_rq = int(np.round(width * w.range_q))
+    return lookup, upd_k, upd_v, n_rq
+
+
+def run_uruv(store: S.UruvStore, rng, w: Workload, width: int,
+             iters: int = 4) -> Tuple[S.UruvStore, float]:
+    """Returns (store, seconds per `width` ops)."""
+    batches = [op_batch(rng, w, width) for _ in range(iters)]
+    rq_starts = rng.integers(0, UNIVERSE - w.range_size,
+                             max(1, iters * 8)).astype(np.int32)
+
+    holder = {"st": store}
+
+    def body():
+        st = holder["st"]
+        k = 0
+        for lookup, upd_k, upd_v, n_rq in batches:
+            st, _ = B.apply_updates(st, upd_k, upd_v)
+            ts = int(st.ts)
+            S.bulk_lookup(st, jnp.asarray(lookup),
+                          jnp.asarray(ts, jnp.int32)).block_until_ready()
+            for _ in range(n_rq):
+                lo = int(rq_starts[k % len(rq_starts)]); k += 1
+                S.range_query(st, lo, lo + w.range_size, ts,
+                              max_scan_leaves=64,
+                              max_results=2048)[0].block_until_ready()
+        holder["st"] = st
+
+    sec = timed(body)
+    return holder["st"], sec / iters
+
+
+def run_flat(store: BL.FlatStore, rng, w: Workload, width: int,
+             iters: int = 4) -> Tuple[BL.FlatStore, float]:
+    batches = [op_batch(rng, w, width) for _ in range(iters)]
+    rq_starts = rng.integers(0, UNIVERSE - w.range_size,
+                             max(1, iters * 8)).astype(np.int32)
+    holder = {"st": store}
+
+    def body():
+        st = holder["st"]
+        k = 0
+        for lookup, upd_k, upd_v, n_rq in batches:
+            st = BL.bulk_update(st, jnp.asarray(upd_k), jnp.asarray(upd_v))
+            BL.bulk_lookup(st, jnp.asarray(lookup)).block_until_ready()
+            for _ in range(n_rq):
+                lo = int(rq_starts[k % len(rq_starts)]); k += 1
+                # validate-retry: the concurrent updater (this loop) forces
+                # a second scan at minimum (Brown-Avni multi-scan)
+                snap = {"n": 0}
+
+                def ref():
+                    snap["n"] += 1
+                    return st
+
+                BL.range_query_validated(ref, lo, lo + w.range_size,
+                                         max_results=2048)
+        holder["st"] = st
+
+    sec = timed(body)
+    return holder["st"], sec / iters

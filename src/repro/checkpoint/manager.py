@@ -1,0 +1,172 @@
+"""MVCC snapshot checkpointing + elastic restore.
+
+The paper's snapshot semantics applied to training state (DESIGN.md Sec 3):
+
+  * SAVE    — take a snapshot ts from the checkpoint index (an UruvStore),
+    write each leaf to disk, then INSERT (shard_key -> manifest_id) entries
+    and publish a manifest.  Training continues during the file writes (the
+    arrays are immutable jax buffers; functional updates never mutate them —
+    the same freeze-for-free argument as the store itself).
+  * RESTORE — read the latest *complete* manifest (crash-safe: manifests are
+    published atomically after all shards land) and device_put each leaf
+    with the shardings of the *current* mesh — elastic: a checkpoint saved
+    on mesh A restores on mesh B.
+  * GC      — superseded checkpoints are tombstoned in the index and files
+    of unreferenced manifests removed, gated by the version tracker
+    (a restore-in-progress registers a snapshot and blocks reclamation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+import jax
+
+from repro.core import batch as uruv_batch
+from repro.core import store as uruv_store
+
+
+def _flatten(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        out.append((name, leaf))
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_write: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_write = async_write
+        self.index = uruv_store.create(
+            uruv_store.UruvConfig(leaf_cap=16, max_leaves=512,
+                                  max_versions=1 << 14)
+        )
+        self._pending: Optional[threading.Thread] = None
+        self._load_existing()
+
+    # ------------------------------------------------------------------ save
+    def save(self, state, step: int) -> None:
+        self.wait()                              # one in-flight snapshot
+        host = jax.tree.map(np.asarray, jax.device_get(state))
+
+        def write():
+            man_dir = self.dir / f"step_{step:08d}"
+            tmp = self.dir / f".tmp_step_{step:08d}"
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir()
+            manifest = {"step": step, "leaves": []}
+            for name, leaf in _flatten(host):
+                fn = name.replace("/", "__") + ".npy"
+                np.save(tmp / fn, leaf)
+                manifest["leaves"].append(
+                    {"name": name, "file": fn,
+                     "shape": list(np.shape(leaf)),
+                     "dtype": str(np.asarray(leaf).dtype)}
+                )
+            (tmp / "manifest.json").write_text(json.dumps(manifest))
+            if man_dir.exists():
+                shutil.rmtree(man_dir)
+            tmp.rename(man_dir)                   # atomic publish
+            # index insert: key = step, value = 1 (manifest id)
+            self.index, _ = uruv_batch.apply_updates(
+                self.index, np.array([step], np.int32),
+                np.array([1], np.int32),
+            )
+            self._gc()
+
+        if self.async_write:
+            self._pending = threading.Thread(target=write, daemon=True)
+            self._pending.start()
+        else:
+            write()
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    # --------------------------------------------------------------- restore
+    def latest_step(self) -> Optional[int]:
+        self.wait()
+        self.index, snap = uruv_store.snapshot(self.index)
+        self.index, items = uruv_batch.range_query_all(
+            self.index, 0, 2**31 - 3, int(snap)
+        )
+        self.index = uruv_store.release(self.index, int(snap))
+        steps = [k for k, v in items if v == 1]
+        return max(steps) if steps else None
+
+    def restore(self, like, step: Optional[int] = None,
+                shardings=None):
+        """Restore into the structure of ``like`` (a pytree of arrays or
+        ShapeDtypeStructs).  ``shardings`` (optional pytree) enables elastic
+        restore onto a different mesh."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError("no complete checkpoint found")
+        man_dir = self.dir / f"step_{step:08d}"
+        manifest = json.loads((man_dir / "manifest.json").read_text())
+        by_name = {l["name"]: l for l in manifest["leaves"]}
+
+        names = [n for n, _ in _flatten(like)]
+        leaves = []
+        for name in names:
+            rec = by_name[name]
+            leaves.append(np.load(man_dir / rec["file"]))
+        treedef = jax.tree_util.tree_structure(like)
+        host_tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        if shardings is not None:
+            host_tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), host_tree, shardings
+            )
+        else:
+            host_tree = jax.tree.map(jax.device_put, host_tree)
+        return host_tree, step
+
+    # -------------------------------------------------------------------- gc
+    def _gc(self) -> None:
+        self.index, snap = uruv_store.snapshot(self.index)
+        self.index, items = uruv_batch.range_query_all(
+            self.index, 0, 2**31 - 3, int(snap)
+        )
+        self.index = uruv_store.release(self.index, int(snap))
+        steps = sorted(k for k, v in items if v == 1)
+        drop = steps[: -self.keep] if self.keep else []
+        if drop:
+            self.index, _ = uruv_batch.apply_updates(
+                self.index, np.array(drop, np.int32),
+                np.full(len(drop), uruv_store.TOMBSTONE, np.int32),
+            )
+            self.index, _ = uruv_store.compact(self.index)
+            for s in drop:
+                d = self.dir / f"step_{s:08d}"
+                if d.exists():
+                    shutil.rmtree(d)
+
+    def _load_existing(self) -> None:
+        steps = []
+        for d in self.dir.glob("step_*"):
+            if (d / "manifest.json").exists():
+                steps.append(int(d.name.split("_")[1]))
+        if steps:
+            arr = np.array(sorted(steps), np.int32)
+            self.index, _ = uruv_batch.apply_updates(
+                self.index, arr, np.ones_like(arr)
+            )

@@ -1,0 +1,113 @@
+"""Non-versioned baseline store — the comparison point for the paper's figures.
+
+The paper benchmarks Uruv against structures without linearizable range
+search (LF-B+Tree [5], OpenBw-Tree [23]) and against VCAS-BST [24].  On TPU
+we keep two baselines:
+
+  * ``FlatStore`` (this module) — a contiguous sorted array ("fat chunk"
+    memory layout in the spirit of Braginsky-Petrank chunks): every batch
+    merges into the whole array, O(n) data movement per update batch, and
+    range queries read the *latest* values (NOT linearizable under
+    interleaved updates).
+  * scan-validate-retry range search (`range_query_validated`) — the
+    multi-scan technique of Brown & Avni [7] the paper calls out as scaling
+    poorly: scan twice, retry until two consecutive scans agree.
+
+Benchmarks (benchmarks/paper_figures.py) reproduce the paper's qualitative
+claims: Uruv's localized leaf updates beat O(n) chunk rebuilds as n grows,
+and snapshot scans beat validate-retry as update rates grow.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.ref import KEY_MAX, NOT_FOUND, TOMBSTONE
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class FlatStore:
+    keys: jax.Array     # int32 [N], sorted, KEY_MAX padded
+    vals: jax.Array     # int32 [N]
+    count: jax.Array    # int32 []
+    capacity: int = dataclasses.field(metadata=dict(static=True))
+
+
+def create(capacity: int = 1 << 16) -> FlatStore:
+    return FlatStore(
+        keys=jnp.full((capacity,), KEY_MAX, jnp.int32),
+        vals=jnp.full((capacity,), NOT_FOUND, jnp.int32),
+        count=jnp.array(0, jnp.int32),
+        capacity=capacity,
+    )
+
+
+@jax.jit
+def bulk_update(store: FlatStore, keys: jax.Array, values: jax.Array) -> FlatStore:
+    """Merge a batch (INSERT, or DELETE via TOMBSTONE) — O(n + P) rebuild."""
+    P = keys.shape[0]
+    N = store.capacity
+    # concatenate old + new with new entries winning ties (later rank wins)
+    rank_old = jnp.arange(N, dtype=jnp.int32)
+    rank_new = N + jnp.arange(P, dtype=jnp.int32)
+    all_keys = jnp.concatenate([store.keys, keys])
+    all_vals = jnp.concatenate([store.vals, values])
+    all_rank = jnp.concatenate([rank_old, rank_new])
+    sk, sr, sv = lax.sort((all_keys, all_rank, all_vals), num_keys=2)
+    # keep the LAST entry of each key group; drop tombstones
+    last = jnp.concatenate([sk[1:] != sk[:-1], jnp.ones((1,), bool)])
+    keep = last & (sk < KEY_MAX) & (sv != TOMBSTONE)
+    order = jnp.argsort(jnp.where(keep, 0, 1).astype(jnp.int32), stable=True)
+    ck = jnp.where(keep[order], sk[order], KEY_MAX)[:N]
+    cv = jnp.where(keep[order], sv[order], NOT_FOUND)[:N]
+    return FlatStore(ck, cv, jnp.sum(keep.astype(jnp.int32)), store.capacity)
+
+
+@jax.jit
+def bulk_lookup(store: FlatStore, keys: jax.Array) -> jax.Array:
+    pos = jnp.searchsorted(store.keys, keys).astype(jnp.int32)
+    pos_c = jnp.minimum(pos, store.capacity - 1)
+    hit = store.keys[pos_c] == keys
+    return jnp.where(hit & (keys < KEY_MAX), store.vals[pos_c], NOT_FOUND)
+
+
+@functools.partial(jax.jit, static_argnames=("max_results",))
+def range_scan(store: FlatStore, k1, k2, *, max_results: int = 1024):
+    """Single unvalidated scan of latest values (not linearizable)."""
+    lo = jnp.searchsorted(store.keys, k1).astype(jnp.int32)
+    idx = lo + jnp.arange(max_results, dtype=jnp.int32)
+    idx_c = jnp.minimum(idx, store.capacity - 1)
+    k = store.keys[idx_c]
+    ok = (idx < store.count) & (k <= k2)
+    keys = jnp.where(ok, k, KEY_MAX)
+    vals = jnp.where(ok, store.vals[idx_c], NOT_FOUND)
+    return keys, vals, jnp.sum(ok.astype(jnp.int32))
+
+
+def range_query_validated(
+    store_ref, k1: int, k2: int, *, max_results: int = 1024, max_retries: int = 16
+) -> Tuple[List[Tuple[int, int]], int]:
+    """Brown-Avni style multi-scan: retry until two scans agree.
+
+    ``store_ref`` is a zero-arg callable returning the *current* FlatStore
+    (emulating a shared pointer under concurrent updates).  Returns
+    (results, n_scans).  Under a quiescent store this is 2 scans; under
+    heavy interleaved updates it retries — the cost the paper's MVCC design
+    avoids.
+    """
+    prev = None
+    for attempt in range(max_retries):
+        k, v, c = range_scan(store_ref(), k1, k2, max_results=max_results)
+        cur = list(zip(np.asarray(k)[: int(c)].tolist(), np.asarray(v)[: int(c)].tolist()))
+        if prev is not None and cur == prev:
+            return cur, attempt + 1
+        prev = cur
+    return prev, max_retries

@@ -1,0 +1,155 @@
+"""Wait-free combining layer — the announce/help construction, batched.
+
+The paper's fast-path/slow-path (Kogan–Petrank [16], Sec 4) maps to:
+
+  * fast path  — the whole announce array is applied in ONE deterministic
+    data-parallel pass (`store.bulk_update`).  This succeeds unless the batch
+    over-concentrates structural inserts (> L new keys into one leaf) or a
+    pool fills up.
+  * slow path  — on rejection the combining layer *helps in rounds*: it
+    halves the announce array (preserving announce order, hence the same
+    linearization) and re-applies; capacity overflows trigger `compact()`
+    (the GC the paper performs during split/merge, gated by the version
+    tracker).  Recursion terminates: a single op can never violate the
+    per-leaf bound, so every op completes in a bounded number of rounds —
+    wait-freedom.
+
+This module is host-side control flow around jitted kernels (the usual
+launcher/runtime split in a TPU system: device passes are bounded and
+deterministic, the host sequences them).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import store as S
+from repro.core.ref import KEY_MAX, NOT_FOUND, TOMBSTONE, OP_DELETE, OP_INSERT, OP_NOP, OP_SEARCH
+
+
+class CapacityError(RuntimeError):
+    """Raised when the store cannot fit the working set even after compact()."""
+
+
+MAX_SLOWPATH_ROUNDS = 64
+
+
+def _clear_oflow(store: S.UruvStore) -> S.UruvStore:
+    return dataclasses.replace(store, oflow=jnp.zeros_like(store.oflow))
+
+
+def apply_updates(
+    store: S.UruvStore,
+    keys: np.ndarray,
+    values: np.ndarray,
+    *,
+    _depth: int = 0,
+) -> Tuple[S.UruvStore, np.ndarray]:
+    """Apply INSERT/DELETE announce array; returns (store, prev_values).
+
+    Timestamps follow announce order across all slow-path rounds (round
+    widths sum to the original width, so ts advances exactly as the
+    one-pass application would).
+    """
+    if _depth > MAX_SLOWPATH_ROUNDS:
+        raise CapacityError("slow path failed to converge; store too small")
+    keys = np.asarray(keys, np.int32)
+    values = np.asarray(values, np.int32)
+    new_store, prev, ok = S.bulk_update(store, jnp.asarray(keys), jnp.asarray(values))
+    if bool(ok):
+        return new_store, np.asarray(prev)
+    reason = int(new_store.oflow) & ~int(store.oflow)
+    if reason & (S.OFLOW_VERSIONS | S.OFLOW_LEAVES):
+        compacted, _ = S.compact(_clear_oflow(store))
+        # progress check on the actual constrained resources: the version
+        # pool and the leaf bump-allocator (compact() resets both)
+        progressed = (
+            int(compacted.n_vers) < int(store.n_vers)
+            or int(compacted.n_alloc) < int(store.n_alloc)
+        )
+        if not progressed and not (reason & S.OFLOW_LEAFBATCH):
+            raise CapacityError(
+                f"store full (versions={int(store.n_vers)}/"
+                f"{store.cfg.max_versions}, "
+                f"leaves={int(store.n_alloc)}/{store.cfg.max_leaves})"
+            )
+        return apply_updates(compacted, keys, values, _depth=_depth + 1)
+    # OFLOW_LEAFBATCH: help in rounds — halve the announce array.
+    if len(keys) == 1:
+        raise CapacityError("single op rejected; leaf_cap too small")
+    mid = len(keys) // 2
+    st = _clear_oflow(store)
+    st, prev_a = apply_updates(st, keys[:mid], values[:mid], _depth=_depth + 1)
+    st, prev_b = apply_updates(st, keys[mid:], values[mid:], _depth=_depth + 1)
+    return st, np.concatenate([prev_a, prev_b])
+
+
+def apply_batch(
+    store: S.UruvStore, ops: Sequence[Tuple[int, int, int]]
+) -> Tuple[S.UruvStore, List[int]]:
+    """Mixed announce array of (op, key, value) — the full ADT, linearized
+    in announce order (op i at ts base+i), matching RefStore.apply_batch.
+    """
+    n = len(ops)
+    codes = np.array([o[0] for o in ops], np.int32)
+    keys = np.array([o[1] for o in ops], np.int32)
+    vals = np.array([o[2] for o in ops], np.int32)
+    base = int(store.ts)
+
+    upd_mask = (codes == OP_INSERT) | (codes == OP_DELETE)
+    ukeys = np.where(upd_mask, keys, KEY_MAX).astype(np.int32)
+    uvals = np.where(codes == OP_DELETE, TOMBSTONE, vals).astype(np.int32)
+    store, prev = apply_updates(store, ukeys, uvals)
+
+    results = np.full(n, NOT_FOUND, np.int64)
+    results[upd_mask] = prev[upd_mask]
+
+    search_mask = codes == OP_SEARCH
+    if search_mask.any():
+        skeys = np.where(search_mask, keys, KEY_MAX).astype(np.int32)
+        snaps = (base + np.arange(n)).astype(np.int32)
+        svals = S.bulk_lookup(store, jnp.asarray(skeys), jnp.asarray(snaps))
+        results[search_mask] = np.asarray(svals)[search_mask]
+    return store, results.tolist()
+
+
+def range_query_all(
+    store: S.UruvStore,
+    k1: int,
+    k2: int,
+    snap_ts: Optional[int] = None,
+    *,
+    max_scan_leaves: int = 64,
+    max_results: int = 1024,
+) -> Tuple[S.UruvStore, List[Tuple[int, int]]]:
+    """Paginated snapshot range scan covering [k1, k2] completely.
+
+    Each device pass is bounded (wait-free); the host continues from the
+    last key seen. Registers/releases the snapshot in the version tracker.
+    """
+    own_snap = snap_ts is None
+    if own_snap:
+        store, ts = S.snapshot(store)
+        snap_ts = int(ts)
+    out: List[Tuple[int, int]] = []
+    lo = k1
+    for _ in range(MAX_SLOWPATH_ROUNDS * 64):
+        keys, vals, cnt, trunc = S.range_query(
+            store, lo, k2, snap_ts,
+            max_scan_leaves=max_scan_leaves, max_results=max_results,
+        )
+        cnt = int(cnt)
+        k = np.asarray(keys)[:cnt]
+        v = np.asarray(vals)[:cnt]
+        out.extend(zip(k.tolist(), v.tolist()))
+        if not bool(trunc):
+            break
+        lo = int(k[-1]) + 1 if cnt else lo + 1  # pragma: no cover (giant scans)
+    if own_snap:
+        store = S.release(store, snap_ts)
+    return store, out

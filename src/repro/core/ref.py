@@ -1,0 +1,182 @@
+"""Sequential reference oracle for Uruv's ADT.
+
+This is the ground truth the JAX/Pallas implementations are validated
+against.  It implements the paper's ADT *with* MVCC semantics:
+
+  - INSERT(K, V)       -> version node (ts, V) appended at vhead
+  - DELETE(K)          -> version node (ts, TOMBSTONE) appended (paper Sec 3.2:
+                          "we utilise a tombstone value ... deleting a node
+                          requires no help since there is no delinking")
+  - SEARCH(K)          -> latest version's value, or NOT_FOUND
+  - RANGEQUERY(K1, K2) -> snapshot ts := FAA(global_ts); per key the first
+                          version with ts <= snapshot (paper Sec 3.4)
+
+Linearization of a batch ("announce array") follows announce order: op i in a
+batch gets timestamp base_ts + i, matching the wait-free combining
+construction in ``repro.core.batch`` (DESIGN.md Sec 2).
+
+Plain Python / O(n) — used only by tests and benchmarks as an oracle.
+"""
+
+from __future__ import annotations
+
+import bisect
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+# Sentinels (shared with the JAX store; see repro.core.store).
+KEY_MAX = 2**31 - 1          # padding sentinel — valid keys are < KEY_MAX - 1
+TOMBSTONE = -(2**31) + 1     # paper's tombstone value
+NOT_FOUND = -1               # paper: SEARCH returns -1 when absent
+
+OP_INSERT = 0
+OP_DELETE = 1
+OP_SEARCH = 2
+OP_NOP = 3
+
+
+@dataclass
+class _Version:
+    ts: int
+    value: int
+
+
+@dataclass
+class RefStore:
+    """Sequential oracle: sorted dict of key -> descending-ts version list."""
+
+    versions: Dict[int, List[_Version]] = field(default_factory=dict)
+    ts: int = 0
+    # Version tracker: active snapshot timestamps (paper Appendix E).
+    active_snapshots: Dict[int, int] = field(default_factory=dict)  # ts -> refcount
+
+    # ---- single ops (each advances the clock by 1) ------------------------
+    def insert(self, key: int, value: int) -> None:
+        self._append_version(key, value)
+
+    def delete(self, key: int) -> bool:
+        """Returns True iff the key was present (not already tombstoned)."""
+        present = self.search(key, advance=False) != NOT_FOUND
+        self._append_version(key, TOMBSTONE)
+        return present
+
+    def search(self, key: int, advance: bool = False) -> int:
+        if advance:
+            self.ts += 1
+        chain = self.versions.get(key)
+        if not chain:
+            return NOT_FOUND
+        v = chain[-1].value  # latest
+        return NOT_FOUND if v == TOMBSTONE else v
+
+    def search_at(self, key: int, snap_ts: int) -> int:
+        """First version with ts <= snap_ts (paper's versioned read)."""
+        chain = self.versions.get(key)
+        if not chain:
+            return NOT_FOUND
+        # chain is ascending in ts; find rightmost with ts <= snap_ts
+        idx = bisect.bisect_right([v.ts for v in chain], snap_ts) - 1
+        if idx < 0:
+            return NOT_FOUND
+        v = chain[idx].value
+        return NOT_FOUND if v == TOMBSTONE else v
+
+    def snapshot(self) -> int:
+        """RANGEQUERY LP: atomic read+increment of the global timestamp."""
+        snap = self.ts
+        self.ts += 1
+        self.active_snapshots[snap] = self.active_snapshots.get(snap, 0) + 1
+        return snap
+
+    def release(self, snap_ts: int) -> None:
+        c = self.active_snapshots.get(snap_ts, 0) - 1
+        if c <= 0:
+            self.active_snapshots.pop(snap_ts, None)
+        else:
+            self.active_snapshots[snap_ts] = c
+
+    def range_query(
+        self, k1: int, k2: int, snap_ts: Optional[int] = None
+    ) -> List[Tuple[int, int]]:
+        if snap_ts is None:
+            snap_ts = self.snapshot()
+            self.release(snap_ts)
+        out = []
+        for key in sorted(self.versions):
+            if k1 <= key <= k2:
+                v = self.search_at(key, snap_ts)
+                if v != NOT_FOUND:
+                    out.append((key, v))
+        return out
+
+    # ---- batched ops (announce-array semantics) ---------------------------
+    def apply_batch(self, ops: List[Tuple[int, int, int]]) -> List[int]:
+        """ops: list of (op_code, key, value). Linearized in announce order.
+
+        Op i gets timestamp base_ts + i.  Returns per-op results:
+        INSERT -> previous value (NOT_FOUND if new); DELETE -> previous value;
+        SEARCH -> value; NOP -> NOT_FOUND.
+        """
+        base = self.ts
+        results = []
+        for i, (op, key, value) in enumerate(ops):
+            ts_i = base + i
+            if op == OP_INSERT:
+                results.append(self.search(key))
+                self._append_version(key, value, ts=ts_i)
+            elif op == OP_DELETE:
+                results.append(self.search(key))
+                self._append_version(key, TOMBSTONE, ts=ts_i)
+            elif op == OP_SEARCH:
+                results.append(self.search_at(key, ts_i))
+            else:
+                results.append(NOT_FOUND)
+        self.ts = base + len(ops)
+        return results
+
+    # ---- GC (paper Appendix E: version tracker gated reclamation) ---------
+    def min_active_ts(self) -> int:
+        return min(self.active_snapshots, default=self.ts)
+
+    def compact(self) -> int:
+        """Physically drop versions unreachable by any active snapshot.
+
+        A version is reclaimable if a newer version of the same key also has
+        ts <= min_active_ts.  Fully-tombstoned keys older than every active
+        snapshot are removed.  Returns number of versions reclaimed.
+        """
+        floor = self.min_active_ts()
+        reclaimed = 0
+        for key in list(self.versions):
+            chain = self.versions[key]
+            keep_from = 0
+            for j in range(len(chain) - 1):
+                if chain[j + 1].ts <= floor:
+                    keep_from = j + 1
+            reclaimed += keep_from
+            chain = chain[keep_from:]
+            if len(chain) == 1 and chain[0].value == TOMBSTONE and chain[0].ts <= floor:
+                reclaimed += 1
+                del self.versions[key]
+            else:
+                self.versions[key] = chain
+        return reclaimed
+
+    # ---- internals ---------------------------------------------------------
+    def _append_version(self, key: int, value: int, ts: Optional[int] = None) -> None:
+        if ts is None:
+            ts = self.ts
+            self.ts += 1
+        self.versions.setdefault(key, []).append(_Version(ts, value))
+
+    # ---- introspection for tests -------------------------------------------
+    def live_items(self) -> List[Tuple[int, int]]:
+        out = []
+        for key in sorted(self.versions):
+            v = self.search(key)
+            if v != NOT_FOUND:
+                out.append((key, v))
+        return out
+
+    def num_versions(self) -> int:
+        return sum(len(c) for c in self.versions.values())

@@ -1,0 +1,172 @@
+"""ShardedUruv — key-range-partitioned Uruv over a mesh axis (shard_map).
+
+Scaling the paper's store across chips: the key space is range-partitioned;
+every device owns one UruvStore shard (all store arrays carry a leading
+device axis, sharded over ``axis_name``).  Bulk ADT calls are SPMD programs:
+
+  update:  all_gather the announce array -> each shard filters + applies its
+           own keys locally (one bounded pass, same wait-free argument).
+  lookup:  all_gather -> owner answers -> psum-combine (one-hot by ownership).
+  range :  every shard scans its local intersection of [k1,k2]; results are
+           all_gather'ed and host-merged.
+
+The global clock stays consistent without communication: every shard
+advances its local ts by the (identical) announce width per batch, so
+timestamps agree deterministically across shards — the FAA of the paper
+becomes a replicated counter.
+
+The replicated announce distribution is the paper-faithful design ("every
+thread reads the whole stateArray"): each shard scans the full announce
+array and applies its own keys.  A ragged all_to_all routing variant
+(collective bytes O(G) instead of O(G·devices)) is the documented next
+step in EXPERIMENTS.md §Perf; it requires per-op timestamp plumbing through
+``bulk_update`` to preserve announce-order linearization.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import store as S
+from repro.core.ref import KEY_MAX, NOT_FOUND
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedConfig:
+    base: S.UruvConfig
+    key_lo: int = 0
+    key_hi: int = 1 << 30
+    axis_name: str = "data"
+
+    def span(self, n_shards: int) -> int:
+        return -(-(self.key_hi - self.key_lo) // n_shards)
+
+
+def create(cfg: ShardedConfig, mesh: Mesh) -> S.UruvStore:
+    """A stacked store: every array gains a leading [n_shards] axis."""
+    n = mesh.shape[cfg.axis_name]
+    proto = S.create(cfg.base)
+
+    def stack(x):
+        return jnp.broadcast_to(x, (n,) + x.shape)
+
+    stacked = jax.tree.map(stack, proto)
+    sharding = NamedSharding(mesh, P(cfg.axis_name))
+    return jax.device_put(stacked, sharding)
+
+
+def _owner(cfg: ShardedConfig, keys: jax.Array, n_shards: int) -> jax.Array:
+    span = cfg.span(n_shards)
+    return jnp.clip((keys - cfg.key_lo) // span, 0, n_shards - 1).astype(jnp.int32)
+
+
+def make_ops(cfg: ShardedConfig, mesh: Mesh):
+    """Build jitted SPMD (update, lookup, range) ops for a given mesh."""
+    ax = cfg.axis_name
+    n_shards = mesh.shape[ax]
+    store_specs = P(ax)
+
+    def _local_update(store, keys, values):
+        me = lax.axis_index(ax)
+        mine = _owner(cfg, keys, n_shards) == me
+        k = jnp.where(mine & (keys < KEY_MAX), keys, KEY_MAX)
+        v = jnp.where(mine, values, 0)
+        new_store, prev, ok = S.bulk_update(store, k, v)
+        # combine per-op results: owner contributes, others contribute 0
+        prev_all = lax.psum(jnp.where(mine, prev - NOT_FOUND, 0), ax) + NOT_FOUND
+        return new_store, prev_all, lax.psum(jnp.where(ok, 0, 1), ax) == 0
+
+    # Each shard's block carries a leading [1] axis under shard_map.
+    def _upd_block(st_blk, keys, values):
+        st = jax.tree.map(lambda x: x[0], st_blk)
+        new_store, prev_all, ok = _local_update(st, keys, values)
+        return jax.tree.map(lambda x: x[None], new_store), prev_all, ok
+
+    update = jax.jit(
+        jax.shard_map(
+            _upd_block,
+            mesh=mesh,
+            in_specs=(store_specs, P(None), P(None)),
+            out_specs=(store_specs, P(), P()),
+        )
+    )
+
+    def _lkp_block(st_blk, keys, snap):
+        st = jax.tree.map(lambda x: x[0], st_blk)
+        me = lax.axis_index(ax)
+        mine = _owner(cfg, keys, n_shards) == me
+        k = jnp.where(mine & (keys < KEY_MAX), keys, KEY_MAX)
+        vals = S.bulk_lookup(st, k, snap)
+        return lax.psum(jnp.where(mine, vals - NOT_FOUND, 0), ax) + NOT_FOUND
+
+    lookup = jax.jit(
+        jax.shard_map(
+            _lkp_block,
+            mesh=mesh,
+            in_specs=(store_specs, P(None), P()),
+            out_specs=P(),
+        )
+    )
+
+    def _rq_block(st_blk, k1, k2, snap, max_scan_leaves, max_results):
+        st = jax.tree.map(lambda x: x[0], st_blk)
+        keys, vals, cnt, trunc = S.range_query(
+            st, k1[0], k2[0], snap[0],
+            max_scan_leaves=max_scan_leaves, max_results=max_results,
+        )
+        return keys[None], vals[None], cnt[None], trunc[None]
+
+    @functools.partial(jax.jit, static_argnames=("max_scan_leaves", "max_results"))
+    def range_q(store, k1, k2, snap, *, max_scan_leaves=64, max_results=1024):
+        f = jax.shard_map(
+            functools.partial(
+                _rq_block,
+                max_scan_leaves=max_scan_leaves,
+                max_results=max_results,
+            ),
+            mesh=mesh,
+            in_specs=(store_specs, P(None), P(None), P(None)),
+            out_specs=(P(ax), P(ax), P(ax), P(ax)),
+        )
+        k1a = jnp.broadcast_to(jnp.asarray(k1, jnp.int32), (1,))
+        k2a = jnp.broadcast_to(jnp.asarray(k2, jnp.int32), (1,))
+        sa = jnp.broadcast_to(jnp.asarray(snap, jnp.int32), (1,))
+        return f(store, k1a, k2a, sa)
+
+    return update, lookup, range_q
+
+
+def merge_range_results(keys, vals, counts) -> list:
+    """Host-side merge of per-shard range results (shards are key-ordered)."""
+    out = []
+    keys = np.asarray(keys)
+    vals = np.asarray(vals)
+    counts = np.asarray(counts)
+    for s in range(keys.shape[0]):
+        c = int(counts[s])
+        out.extend(zip(keys[s, :c].tolist(), vals[s, :c].tolist()))
+    return out
+
+
+def global_ts(store) -> int:
+    """The replicated FAA counter (identical on every shard)."""
+    return int(np.asarray(store.ts)[0])
+
+
+def sharded_snapshot(store):
+    """Register a snapshot on every shard (replicated tracker)."""
+    snap = global_ts(store)
+    new = jax.vmap(lambda st: S.snapshot(st)[0])(store)
+    return new, snap
+
+
+def sharded_release(store, snap: int):
+    return jax.vmap(lambda st: S.release(st, jnp.asarray(snap, jnp.int32)))(store)

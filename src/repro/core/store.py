@@ -1,0 +1,778 @@
+"""UruvStore — the paper's B+-tree + MVCC key-value store, TPU-native.
+
+Structure (DESIGN.md Sec 2):
+
+  * Leaf pool   — SoA "fat leaf" arrays ``leaf_keys[ML, L]`` (sorted rows,
+    ``KEY_MAX`` padded) + ``leaf_vhead[ML, L]`` (version-chain heads).  Leaves
+    are chained (``leaf_next``) exactly like the paper's linked leaf level and
+    carry a creation timestamp ``leaf_ts`` and ``newnext``/``frozen`` fields
+    mirroring the paper's split protocol.
+  * Directory   — the internal fat-node index: a compact, sorted array of
+    (separator key, leaf id).  It is *rebuilt proactively* whenever a batch
+    changes structure — the bulk-synchronous analogue of the paper's proactive
+    split/merge (restructuring never cascades; one deterministic pass).
+  * Version pool — SoA ``Vnode``s: ``ver_value/ver_ts/ver_next`` with a bump
+    allocator.  DELETE writes a TOMBSTONE version (paper Sec 3.2); physical
+    reclamation happens in :func:`compact`, gated by the version tracker
+    (paper Appendix E).
+  * Version tracker — ring of (snapshot ts, active) entries; ``min_active_ts``
+    gates GC.
+
+Wait-freedom (paper Sec 4, adapted): a batch *is* the announce array.  Every
+op in the batch completes in one deterministic data-parallel pass
+(O(L + log n + sort(P)) depth).  Conflicting ops on one key are ordered by
+announce rank (timestamp = base_ts + announce index), which is precisely the
+linearization the helping protocol of Kogan-Petrank produces.  If a batch
+over-concentrates new keys on one leaf (more than L new keys into a single
+leaf) the pass aborts atomically with ``ok=False`` and the combining layer
+(``repro.core.batch``) falls back to the *slow path*: smaller rounds that are
+guaranteed to make progress — the fast-path/slow-path structure of the paper.
+
+Everything is fixed-shape, jit-compatible, and functional: each update
+returns a new store pytree.  The old pytree remains a valid frozen snapshot
+(the paper's freeze-and-copy for free).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.ref import KEY_MAX, NOT_FOUND, TOMBSTONE
+
+KEY_MIN = -(2**31)  # directory sentinel for the left-most separator
+
+# Overflow flag bits (store.oflow)
+OFLOW_VERSIONS = 1
+OFLOW_LEAVES = 2
+OFLOW_TRACKER = 4
+OFLOW_LEAFBATCH = 8   # > L new keys routed to a single leaf (slow-path signal)
+
+
+@dataclasses.dataclass(frozen=True)
+class UruvConfig:
+    """Static capacities (compile-time constants)."""
+
+    leaf_cap: int = 32          # L — max keys per leaf (paper's MAX)
+    max_leaves: int = 4096      # ML — leaf pool size
+    max_versions: int = 1 << 16  # MV — version pool size
+    tracker_cap: int = 128      # MT — version-tracker ring size
+    max_chain: int = 64         # bound on version-chain walks / GC retention
+
+    @property
+    def min_fill(self) -> int:  # paper's MIN
+        return self.leaf_cap // 4
+
+    @property
+    def pack_fill(self) -> int:  # occupancy target after compact()
+        return max(1, (3 * self.leaf_cap) // 4)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class UruvStore:
+    # --- leaf pool ---
+    leaf_keys: jax.Array    # int32 [ML, L], sorted rows, KEY_MAX padded
+    leaf_vhead: jax.Array   # int32 [ML, L], -1 where empty
+    leaf_count: jax.Array   # int32 [ML]
+    leaf_next: jax.Array    # int32 [ML], -1 = end (paper: next)
+    leaf_newnext: jax.Array  # int32 [ML], -1 = unset (paper: newNext)
+    leaf_frozen: jax.Array  # bool  [ML] (paper: frozen)
+    leaf_ts: jax.Array      # int32 [ML] creation timestamp (paper: ts)
+    n_alloc: jax.Array      # int32 [] bump allocator over the leaf pool
+    # --- directory (internal index; compact + sorted) ---
+    dir_keys: jax.Array     # int32 [ML], KEY_MAX padded; dir_keys[0] = KEY_MIN
+    dir_leaf: jax.Array     # int32 [ML]
+    n_leaves: jax.Array     # int32 []
+    # --- version pool ---
+    ver_value: jax.Array    # int32 [MV]
+    ver_ts: jax.Array       # int32 [MV]
+    ver_next: jax.Array     # int32 [MV], -1 = end
+    n_vers: jax.Array       # int32 []
+    # --- clock + tracker ---
+    ts: jax.Array           # int32 [] global timestamp (paper's FAA counter)
+    trk_ts: jax.Array       # int32 [MT]
+    trk_active: jax.Array   # bool  [MT]
+    trk_cursor: jax.Array   # int32 [] ring cursor
+    # --- status ---
+    oflow: jax.Array        # int32 [] bitmask of OFLOW_*
+    cfg: UruvConfig = dataclasses.field(metadata=dict(static=True))
+
+
+def create(cfg: UruvConfig = UruvConfig()) -> UruvStore:
+    ML, L, MV, MT = cfg.max_leaves, cfg.leaf_cap, cfg.max_versions, cfg.tracker_cap
+    i32 = jnp.int32
+    store = UruvStore(
+        leaf_keys=jnp.full((ML, L), KEY_MAX, i32),
+        leaf_vhead=jnp.full((ML, L), -1, i32),
+        leaf_count=jnp.zeros((ML,), i32),
+        leaf_next=jnp.full((ML,), -1, i32),
+        leaf_newnext=jnp.full((ML,), -1, i32),
+        leaf_frozen=jnp.zeros((ML,), bool),
+        leaf_ts=jnp.zeros((ML,), i32),
+        n_alloc=jnp.array(1, i32),              # leaf 0 is the initial empty leaf
+        dir_keys=jnp.full((ML,), KEY_MAX, i32).at[0].set(KEY_MIN),
+        dir_leaf=jnp.full((ML,), -1, i32).at[0].set(0),
+        n_leaves=jnp.array(1, i32),
+        ver_value=jnp.zeros((MV,), i32),
+        ver_ts=jnp.zeros((MV,), i32),
+        ver_next=jnp.full((MV,), -1, i32),
+        n_vers=jnp.array(0, i32),
+        ts=jnp.array(0, i32),
+        trk_ts=jnp.zeros((MT,), i32),
+        trk_active=jnp.zeros((MT,), bool),
+        trk_cursor=jnp.array(0, i32),
+        oflow=jnp.array(0, i32),
+        cfg=cfg,
+    )
+    return store
+
+
+# ---------------------------------------------------------------------------
+# Locate: directory descent + in-leaf position (the traversal of Fig. 1).
+# The Pallas kernel repro.kernels.uruv_search implements the same contract.
+# ---------------------------------------------------------------------------
+
+def _locate(store: UruvStore, keys: jax.Array):
+    """Vectorized root->leaf traversal.
+
+    Returns (dir_pos, leaf_id, slot, exists, vhead) per query key.
+    """
+    pos = jnp.searchsorted(store.dir_keys, keys, side="right").astype(jnp.int32) - 1
+    pos = jnp.maximum(pos, 0)
+    leaf_id = store.dir_leaf[pos]
+    rows = store.leaf_keys[leaf_id]                      # [P, L]
+    slot = jnp.sum(rows < keys[:, None], axis=1).astype(jnp.int32)
+    in_range = slot < store.cfg.leaf_cap
+    hit = jnp.take_along_axis(rows, jnp.minimum(slot, store.cfg.leaf_cap - 1)[:, None], axis=1)[:, 0]
+    exists = in_range & (hit == keys)
+    vhead = jnp.where(
+        exists,
+        jnp.take_along_axis(
+            store.leaf_vhead[leaf_id],
+            jnp.minimum(slot, store.cfg.leaf_cap - 1)[:, None],
+            axis=1,
+        )[:, 0],
+        -1,
+    )
+    return pos, leaf_id, slot, exists, vhead
+
+
+def _resolve(store: UruvStore, vhead: jax.Array, snap_ts: jax.Array) -> jax.Array:
+    """Versioned read: first version with ts <= snap (paper's read()/vCAS path).
+
+    Bounded chain walk (cfg.max_chain); the Pallas kernel
+    repro.kernels.versioned_read mirrors this contract.
+    """
+    def body(state):
+        cur, steps = state
+        ts_cur = jnp.where(cur >= 0, store.ver_ts[jnp.maximum(cur, 0)], 0)
+        advance = (cur >= 0) & (ts_cur > snap_ts)
+        nxt = jnp.where(advance, store.ver_next[jnp.maximum(cur, 0)], cur)
+        return nxt, steps + 1
+
+    def cond(state):
+        cur, steps = state
+        ts_cur = jnp.where(cur >= 0, store.ver_ts[jnp.maximum(cur, 0)], 0)
+        return jnp.any((cur >= 0) & (ts_cur > snap_ts)) & (steps < store.cfg.max_chain)
+
+    cur, _ = lax.while_loop(cond, body, (vhead, jnp.array(0, jnp.int32)))
+    ok = cur >= 0
+    ts_cur = jnp.where(ok, store.ver_ts[jnp.maximum(cur, 0)], 0)
+    ok = ok & (ts_cur <= snap_ts)
+    val = jnp.where(ok, store.ver_value[jnp.maximum(cur, 0)], NOT_FOUND)
+    return jnp.where(val == TOMBSTONE, NOT_FOUND, val)
+
+
+# ---------------------------------------------------------------------------
+# SEARCH (batched)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def bulk_lookup(store: UruvStore, keys: jax.Array, snap_ts: jax.Array) -> jax.Array:
+    """Batched SEARCH at per-op snapshot timestamps.
+
+    ``snap_ts`` may be scalar or [P].  Padded (KEY_MAX) keys return NOT_FOUND.
+    Read-only: does not advance the clock (the combining layer assigns op
+    timestamps; see repro.core.batch).
+    """
+    snap_ts = jnp.broadcast_to(jnp.asarray(snap_ts, jnp.int32), keys.shape)
+    _, _, _, exists, vhead = _locate(store, keys)
+    vals = _resolve(store, jnp.where(exists, vhead, -1), snap_ts)
+    return jnp.where(keys >= KEY_MAX, NOT_FOUND, vals)
+
+
+# ---------------------------------------------------------------------------
+# INSERT / DELETE (batched, atomic, proactive restructuring)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def bulk_update(
+    store: UruvStore, keys: jax.Array, values: jax.Array
+) -> Tuple[UruvStore, jax.Array, jax.Array]:
+    """Apply a batch of INSERT/DELETE ops (DELETE == value TOMBSTONE).
+
+    Linearization: op i gets timestamp ``store.ts + i`` (announce order).
+    Returns (new_store, prev_values[P], ok).  ``ok=False`` means the batch
+    was rejected atomically (capacity/conflict overflow) and must be retried
+    via the slow path (repro.core.batch splits it).  Padded keys (KEY_MAX)
+    are no-ops.
+    """
+    cfg = store.cfg
+    P = keys.shape[0]
+    L, ML, MV = cfg.leaf_cap, cfg.max_leaves, cfg.max_versions
+    i32 = jnp.int32
+    base_ts = store.ts
+    announce = jnp.arange(P, dtype=i32)
+    valid = keys < KEY_MAX
+
+    # ---- sort by (key, announce idx): groups duplicates, keeps LP order ----
+    skeys, sidx, svals = lax.sort((keys, announce, values), num_keys=2)
+    svalid = skeys < KEY_MAX
+    first_occ = jnp.concatenate([jnp.ones((1,), bool), skeys[1:] != skeys[:-1]])
+    last_occ = jnp.concatenate([skeys[1:] != skeys[:-1], jnp.ones((1,), bool)])
+    first_occ &= svalid
+    last_occ &= svalid
+
+    # ---- locate all ops ----------------------------------------------------
+    dpos, leaf_id, slot, exists, old_vhead = _locate(store, skeys)
+    exists &= svalid
+
+    # ---- version slots: bump-allocate one per valid op --------------------
+    vofs = jnp.cumsum(svalid.astype(i32)) - 1
+    vslot = jnp.where(svalid, store.n_vers + vofs, MV)        # MV == dropped
+    nval = jnp.sum(svalid.astype(i32))
+
+    # chain: first occurrence links to old vhead, later ones to predecessor
+    prev_slot = jnp.concatenate([jnp.full((1,), -1, i32), vslot[:-1]])
+    vnext = jnp.where(first_occ, old_vhead, prev_slot)
+    vts = base_ts + sidx
+
+    # per-op previous value (sequential semantics inside the batch)
+    prev_vals_sorted = jnp.where(
+        first_occ,
+        jnp.where(
+            exists,
+            _latest_value(store, old_vhead),
+            NOT_FOUND,
+        ),
+        _tomb(jnp.concatenate([jnp.full((1,), NOT_FOUND, i32), svals[:-1]])),
+    )
+    prev_vals_sorted = jnp.where(svalid, prev_vals_sorted, NOT_FOUND)
+
+    # last occurrence of each key group (its vslot becomes the new vhead)
+    pos_arr = jnp.arange(P, dtype=i32)
+    seg_start = _cummax(jnp.where(first_occ, pos_arr, -1))
+    last_of_seg = jnp.full((P,), -1, i32).at[
+        jnp.where(last_occ, seg_start, P - 1)
+    ].max(jnp.where(last_occ, pos_arr, -1))
+    group_vhead = jnp.where(last_of_seg >= 0, vslot[jnp.maximum(last_of_seg, 0)], -1)
+
+    # ---- new-key groups (structural inserts) -------------------------------
+    is_new = first_occ & (~exists)
+    n_new = jnp.sum(is_new.astype(i32))
+    # compact new entries to the front, preserving key order
+    order = jnp.argsort(jnp.where(is_new, 0, 1).astype(i32), stable=True)
+    ckeys = skeys[order]
+    cvhead = group_vhead[order]
+    cdpos = jnp.where(is_new[order], dpos[order], ML)         # ML = padding
+    crank = jnp.arange(P, dtype=i32)
+    cval = crank < n_new
+
+    boundary = cval & jnp.concatenate(
+        [jnp.ones((1,), bool), cdpos[1:] != cdpos[:-1]]
+    )
+    gid = jnp.cumsum(boundary.astype(i32)) - 1                # group index t
+    gstart = _cummax(jnp.where(boundary, crank, -1))
+    goffset = crank - gstart                                   # index within group
+    n_groups = jnp.sum(boundary.astype(i32))
+
+    # per-group metadata (padded to P groups)
+    gpos = jnp.full((P,), ML, i32).at[
+        jnp.where(boundary, gid, P - 1)
+    ].min(jnp.where(boundary, cdpos, ML))                      # directory position
+    gcount = jnp.zeros((P,), i32).at[
+        jnp.where(cval, gid, P - 1)
+    ].add(jnp.where(cval, 1, 0))
+    g_is_real = jnp.arange(P) < n_groups
+    gleaf = jnp.where(g_is_real, store.dir_leaf[jnp.minimum(gpos, ML - 1)], 0)
+    gold_count = jnp.where(g_is_real, store.leaf_count[gleaf], 0)
+
+    # slow-path signal: more than L new keys for one leaf
+    leaf_batch_ovf = jnp.any(gcount > L)
+    n_splits = jnp.sum((g_is_real & (gold_count + gcount > L)).astype(i32))
+
+    overflow = (
+        jnp.where(store.n_vers + nval > MV, OFLOW_VERSIONS, 0)
+        | jnp.where(store.n_alloc + 2 * n_splits > ML, OFLOW_LEAVES, 0)
+        | jnp.where(store.n_leaves + n_splits > ML, OFLOW_LEAVES, 0)
+        | jnp.where(leaf_batch_ovf, OFLOW_LEAFBATCH, 0)
+    ).astype(i32)
+    ok = overflow == 0
+
+    def apply(store: UruvStore) -> UruvStore:
+        # ---- version pool writes ----
+        ver_value = store.ver_value.at[vslot].set(svals, mode="drop")
+        ver_ts = store.ver_ts.at[vslot].set(vts, mode="drop")
+        ver_next = store.ver_next.at[vslot].set(vnext, mode="drop")
+        n_vers = store.n_vers + nval
+
+        # ---- existing-key vhead updates (last occurrence only) ----
+        upd = last_occ & exists
+        u_leaf = jnp.where(upd, leaf_id, ML)
+        leaf_vhead = store.leaf_vhead.at[u_leaf, slot].set(vslot, mode="drop")
+
+        # ---- structural phase: merge new keys into touched leaves ----
+        # workspace [P groups, 2L]
+        wk_keys = jnp.full((P, 2 * L), KEY_MAX, i32)
+        wk_vh = jnp.full((P, 2 * L), -1, i32)
+        wk_keys = wk_keys.at[:, :L].set(
+            jnp.where(g_is_real[:, None], store.leaf_keys[gleaf], KEY_MAX)
+        )
+        wk_vh = wk_vh.at[:, :L].set(
+            jnp.where(g_is_real[:, None], leaf_vhead[gleaf], -1)
+        )
+        # scatter new (key, vhead) pairs at L + offset within their group row
+        row = jnp.where(cval, gid, P - 1)
+        col = jnp.where(cval, L + jnp.minimum(goffset, L - 1), 2 * L)
+        wk_keys = wk_keys.at[row, col].set(
+            jnp.where(cval, ckeys, KEY_MAX), mode="drop"
+        )
+        wk_vh = wk_vh.at[row, col].set(jnp.where(cval, cvhead, -1), mode="drop")
+        wk_keys, wk_vh = lax.sort((wk_keys, wk_vh), dimension=1, num_keys=1)
+
+        merged = gold_count + gcount                          # [P]
+        split = g_is_real & (merged > L)
+        lc = jnp.where(split, (merged + 1) // 2, merged)
+
+        # allocate new leaves for splits: (left, right) per split, in order
+        sofs = jnp.cumsum(split.astype(i32)) - 1
+        left_id = jnp.where(split, store.n_alloc + 2 * sofs, ML)
+        right_id = jnp.where(split, left_id + 1, ML)
+        n_alloc = store.n_alloc + 2 * n_splits
+
+        colidx = jnp.arange(2 * L, dtype=i32)[None, :]
+        # in-place rewrite (no split): write merged row back to gleaf
+        ip = g_is_real & (~split)
+        ip_leaf = jnp.where(ip, gleaf, ML)
+        leaf_keys = store.leaf_keys.at[ip_leaf, :].set(wk_keys[:, :L], mode="drop")
+        leaf_vhead = leaf_vhead.at[ip_leaf, :].set(wk_vh[:, :L], mode="drop")
+        leaf_count = store.leaf_count.at[ip_leaf].set(merged, mode="drop")
+
+        # split: left half -> left_id, right half -> right_id
+        lmask = colidx < lc[:, None]
+        lk = jnp.where(lmask, wk_keys, KEY_MAX)[:, :L]
+        lv = jnp.where(lmask, wk_vh, -1)[:, :L]
+        shift = jnp.minimum(colidx + lc[:, None], 2 * L - 1)
+        rk_full = jnp.take_along_axis(wk_keys, shift, axis=1)
+        rv_full = jnp.take_along_axis(wk_vh, shift, axis=1)
+        rmask = colidx < (merged - lc)[:, None]
+        rk = jnp.where(rmask, rk_full, KEY_MAX)[:, :L]
+        rv = jnp.where(rmask, rv_full, -1)[:, :L]
+
+        leaf_keys = leaf_keys.at[left_id, :].set(lk, mode="drop")
+        leaf_vhead = leaf_vhead.at[left_id, :].set(lv, mode="drop")
+        leaf_count = leaf_count.at[left_id].set(lc, mode="drop")
+        leaf_keys = leaf_keys.at[right_id, :].set(rk, mode="drop")
+        leaf_vhead = leaf_vhead.at[right_id, :].set(rv, mode="drop")
+        leaf_count = leaf_count.at[right_id].set(merged - lc, mode="drop")
+
+        leaf_ts = store.leaf_ts.at[left_id].set(base_ts, mode="drop")
+        leaf_ts = leaf_ts.at[right_id].set(base_ts, mode="drop")
+        # paper's split protocol bookkeeping: old leaf frozen, newNext -> left
+        old_split_leaf = jnp.where(split, gleaf, ML)
+        leaf_frozen = store.leaf_frozen.at[old_split_leaf].set(True, mode="drop")
+        leaf_newnext = store.leaf_newnext.at[old_split_leaf].set(
+            left_id, mode="drop"
+        )
+
+        # ---- directory rebuild (proactive; one deterministic pass) ----
+        pos_to_g = jnp.full((ML + 1,), -1, i32).at[
+            jnp.minimum(gpos, ML)
+        ].set(jnp.where(g_is_real, jnp.arange(P, dtype=i32), -1), mode="drop")
+        allpos = jnp.arange(ML, dtype=i32)
+        live = allpos < store.n_leaves
+        g_at = pos_to_g[allpos]                               # [-1 or group idx]
+        touched = live & (g_at >= 0)
+        g_at_c = jnp.maximum(g_at, 0)
+        is_split_at = touched & split[g_at_c]
+
+        out_cnt = jnp.where(live, jnp.where(is_split_at, 2, 1), 0)
+        offs = jnp.cumsum(out_cnt) - out_cnt                  # exclusive
+        new_n_leaves = jnp.sum(out_cnt)
+
+        e0_key = jnp.where(
+            touched, wk_keys[g_at_c, 0], store.dir_keys[allpos]
+        )
+        e0_key = jnp.where(allpos == 0, KEY_MIN, e0_key)
+        e0_leaf = jnp.where(
+            is_split_at, left_id[g_at_c], store.dir_leaf[allpos]
+        )
+        e1_key = jnp.take_along_axis(
+            wk_keys[g_at_c], jnp.minimum(lc[g_at_c], 2 * L - 1)[:, None], axis=1
+        )[:, 0]
+        e1_leaf = right_id[g_at_c]
+
+        dir_keys = jnp.full((ML,), KEY_MAX, i32)
+        dir_leaf = jnp.full((ML,), -1, i32)
+        w0 = jnp.where(live, offs, ML)
+        dir_keys = dir_keys.at[w0].set(e0_key, mode="drop")
+        dir_leaf = dir_leaf.at[w0].set(e0_leaf, mode="drop")
+        w1 = jnp.where(is_split_at, offs + 1, ML)
+        dir_keys = dir_keys.at[w1].set(e1_key, mode="drop")
+        dir_leaf = dir_leaf.at[w1].set(e1_leaf, mode="drop")
+
+        # ---- rebuild leaf_next from the directory (keeps the chain exact)
+        npos = jnp.arange(ML, dtype=i32)
+        nxt = jnp.where(npos + 1 < new_n_leaves, dir_leaf[jnp.minimum(npos + 1, ML - 1)], -1)
+        src = jnp.where(npos < new_n_leaves, dir_leaf[npos], ML)
+        leaf_next = store.leaf_next.at[src].set(nxt, mode="drop")
+
+        return dataclasses.replace(
+            store,
+            leaf_keys=leaf_keys,
+            leaf_vhead=leaf_vhead,
+            leaf_count=leaf_count,
+            leaf_next=leaf_next,
+            leaf_newnext=leaf_newnext,
+            leaf_frozen=leaf_frozen,
+            leaf_ts=leaf_ts,
+            n_alloc=n_alloc,
+            dir_keys=dir_keys,
+            dir_leaf=dir_leaf,
+            n_leaves=new_n_leaves,
+            ver_value=ver_value,
+            ver_ts=ver_ts,
+            ver_next=ver_next,
+            n_vers=n_vers,
+            ts=base_ts + P,
+            oflow=store.oflow,
+        )
+
+    def reject(store: UruvStore) -> UruvStore:
+        return dataclasses.replace(store, oflow=store.oflow | overflow)
+
+    new_store = lax.cond(ok, apply, reject, store)
+    # un-sort results back to announce order
+    prev_vals = jnp.zeros((P,), i32).at[sidx].set(prev_vals_sorted)
+    prev_vals = jnp.where(ok, prev_vals, NOT_FOUND)
+    return new_store, prev_vals, ok
+
+
+def _latest_value(store: UruvStore, vhead: jax.Array) -> jax.Array:
+    ok = vhead >= 0
+    val = jnp.where(ok, store.ver_value[jnp.maximum(vhead, 0)], NOT_FOUND)
+    return _tomb(val)
+
+
+def _tomb(val: jax.Array) -> jax.Array:
+    return jnp.where(val == TOMBSTONE, NOT_FOUND, val)
+
+
+def _cummax(x: jax.Array) -> jax.Array:
+    return lax.associative_scan(jnp.maximum, x)
+
+
+# ---------------------------------------------------------------------------
+# RANGEQUERY
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("max_scan_leaves", "max_results"))
+def range_query(
+    store: UruvStore,
+    k1: jax.Array,
+    k2: jax.Array,
+    snap_ts: jax.Array,
+    *,
+    max_scan_leaves: int = 64,
+    max_results: int = 1024,
+):
+    """Snapshot range scan (paper Sec 3.4 / Fig. 11).
+
+    Walks the chained leaf level from the first leaf that may contain k1,
+    resolving each key's version at ``snap_ts`` and dropping tombstones.
+    Returns (keys[max_results], values[max_results], count, truncated).
+    ``truncated`` means the scan window (max_scan_leaves) ended before k2 —
+    the host continues with k1' = last returned key + 1 (pagination), so the
+    overall scan is still wait-free: each call is one bounded pass.
+    """
+    cfg = store.cfg
+    L, ML = cfg.leaf_cap, cfg.max_leaves
+    i32 = jnp.int32
+    k1 = jnp.asarray(k1, i32)
+    k2 = jnp.asarray(k2, i32)
+    snap_ts = jnp.asarray(snap_ts, i32)
+
+    lo = jnp.maximum(
+        jnp.searchsorted(store.dir_keys, k1, side="right").astype(i32) - 1, 0
+    )
+    ppos = lo + jnp.arange(max_scan_leaves, dtype=i32)
+    pvalid = ppos < store.n_leaves
+    # a leaf participates if its separator <= k2 (first leaf always does)
+    sep = jnp.where(pvalid, store.dir_keys[jnp.minimum(ppos, ML - 1)], KEY_MAX)
+    pvalid &= (sep <= k2) | (ppos == lo)
+    lids = jnp.where(pvalid, store.dir_leaf[jnp.minimum(ppos, ML - 1)], 0)
+
+    keys = store.leaf_keys[lids]                             # [S, L]
+    vheads = store.leaf_vhead[lids]
+    counts = store.leaf_count[lids]
+    slot_ok = jnp.arange(L, dtype=i32)[None, :] < counts[:, None]
+    kmask = pvalid[:, None] & slot_ok & (keys >= k1) & (keys <= k2)
+
+    flat_vh = jnp.where(kmask, vheads, -1).reshape(-1)
+    flat_keys = jnp.where(kmask, keys, KEY_MAX).reshape(-1)
+    vals = _resolve(store, flat_vh, snap_ts)
+    hit = (flat_keys < KEY_MAX) & (vals != NOT_FOUND)
+
+    # compact hits to the front (sorted by key), take max_results
+    sort_k = jnp.where(hit, flat_keys, KEY_MAX)
+    sk, sv = lax.sort((sort_k, vals), num_keys=1)
+    count = jnp.minimum(jnp.sum(hit.astype(i32)), max_results)
+    out_keys = sk[:max_results]
+    out_vals = jnp.where(out_keys < KEY_MAX, sv[:max_results], NOT_FOUND)
+    out_keys = jnp.where(out_keys < KEY_MAX, out_keys, KEY_MAX)
+
+    # truncated if the scan window closed before covering k2
+    last_pos = lo + max_scan_leaves
+    more_leaves = (last_pos < store.n_leaves) & (
+        store.dir_keys[jnp.minimum(last_pos, ML - 1)] <= k2
+    )
+    truncated = more_leaves | (jnp.sum(hit.astype(i32)) > max_results)
+    return out_keys, out_vals, count, truncated
+
+
+# ---------------------------------------------------------------------------
+# Snapshots + version tracker (paper Appendix E)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def snapshot(store: UruvStore) -> Tuple[UruvStore, jax.Array]:
+    """RANGEQUERY LP: read the clock, register in the tracker ring."""
+    snap = store.ts
+    cur = store.trk_cursor % store.cfg.tracker_cap
+    lost = store.trk_active[cur]  # ring full: cannot register -> flag
+    trk_ts = store.trk_ts.at[cur].set(snap)
+    trk_active = store.trk_active.at[cur].set(True)
+    new = dataclasses.replace(
+        store,
+        ts=store.ts + 1,
+        trk_ts=trk_ts,
+        trk_active=trk_active,
+        trk_cursor=store.trk_cursor + 1,
+        oflow=store.oflow | jnp.where(lost, OFLOW_TRACKER, 0).astype(jnp.int32),
+    )
+    return new, snap
+
+
+@jax.jit
+def release(store: UruvStore, snap_ts: jax.Array) -> UruvStore:
+    match = store.trk_active & (store.trk_ts == snap_ts)
+    # release one matching entry (the oldest)
+    idx = jnp.argmax(match)
+    any_match = jnp.any(match)
+    trk_active = store.trk_active.at[jnp.where(any_match, idx, store.cfg.tracker_cap)].set(
+        False, mode="drop"
+    )
+    return dataclasses.replace(store, trk_active=trk_active)
+
+
+@jax.jit
+def min_active_ts(store: UruvStore) -> jax.Array:
+    return jnp.min(jnp.where(store.trk_active, store.trk_ts, store.ts))
+
+
+# ---------------------------------------------------------------------------
+# COMPACT — physical reclamation + proactive merge/repack (paper Appendix E:
+# "Every time we merge or split, we physically remove deleted keys ...").
+# In the bulk-synchronous design this is a global repack: drop versions no
+# active snapshot can read, drop dead keys, rebuild perfectly packed leaves.
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def compact(store: UruvStore) -> Tuple[UruvStore, jax.Array]:
+    """Rebuild the store, reclaiming versions below min_active_ts.
+
+    Per key we retain: every version with ts > floor, plus the single
+    resolved version at the floor — bounded to cfg.max_chain retained
+    versions (documented retention bound; DESIGN.md Sec 2).
+    Returns (new_store, n_live_keys).
+    """
+    cfg = store.cfg
+    L, ML, MV, D = cfg.leaf_cap, cfg.max_leaves, cfg.max_versions, cfg.max_chain
+    i32 = jnp.int32
+    floor = min_active_ts(store)
+
+    # gather all live keys in directory order -> flat [ML*L]
+    order_leaf = jnp.where(
+        jnp.arange(ML) < store.n_leaves, store.dir_leaf[jnp.arange(ML)], 0
+    )
+    live_rows = jnp.arange(ML) < store.n_leaves
+    keys = jnp.where(live_rows[:, None], store.leaf_keys[order_leaf], KEY_MAX)
+    vhs = jnp.where(live_rows[:, None], store.leaf_vhead[order_leaf], -1)
+    slot_ok = jnp.arange(L)[None, :] < store.leaf_count[order_leaf][:, None]
+    keys = jnp.where(slot_ok, keys, KEY_MAX).reshape(-1)
+    vhs = jnp.where(slot_ok.reshape(-1), vhs.reshape(-1), -1)
+    N = keys.shape[0]
+
+    # walk each chain up to depth D, collecting retained versions.
+    def step(carry, _):
+        cur, kept, reached_floor = carry
+        ok = cur >= 0
+        ts_c = jnp.where(ok, store.ver_ts[jnp.maximum(cur, 0)], 0)
+        keep_this = ok & (~reached_floor)
+        at_or_below = ok & (ts_c <= floor)
+        out = (jnp.where(keep_this, cur, -1), keep_this)
+        reached_floor = reached_floor | at_or_below
+        nxt = jnp.where(ok, store.ver_next[jnp.maximum(cur, 0)], -1)
+        return (nxt, kept + keep_this.astype(i32), reached_floor), out
+
+    init = (vhs, jnp.zeros((N,), i32), jnp.zeros((N,), bool))
+    (_, kept_n, _), (kept_idx, kept_mask) = lax.scan(
+        step, init, None, length=D
+    )
+    kept_idx = kept_idx.T          # [N, D], newest-first
+    kept_mask = kept_mask.T
+
+    # live key = resolved *latest* value is not a tombstone OR it has history
+    # a snapshot >= floor can still read. We keep any key whose retained chain
+    # is non-empty and not (single tombstone at/below floor).
+    head_val = jnp.where(vhs >= 0, store.ver_value[jnp.maximum(vhs, 0)], NOT_FOUND)
+    only_old_tomb = (
+        (kept_n == 1)
+        & (head_val == TOMBSTONE)
+        & (jnp.where(vhs >= 0, store.ver_ts[jnp.maximum(vhs, 0)], 0) <= floor)
+    )
+    live = (keys < KEY_MAX) & (kept_n > 0) & (~only_old_tomb)
+
+    # compact live keys to front (they are already key-sorted in dir order)
+    corder = jnp.argsort(jnp.where(live, 0, 1).astype(i32), stable=True)
+    ckeys = jnp.where(live[corder], keys[corder], KEY_MAX)
+    ckept_idx = kept_idx[corder]
+    ckept_mask = kept_mask[corder]
+    n_live = jnp.sum(live.astype(i32))
+
+    # rebuild the version pool: new slot per retained version
+    flat_keep = ckept_mask.reshape(-1)
+    new_slot_flat = jnp.cumsum(flat_keep.astype(i32)) - 1
+    new_slot = jnp.where(ckept_mask, new_slot_flat.reshape(ckept_mask.shape), -1)
+    n_new_vers = jnp.sum(flat_keep.astype(i32))
+    src = jnp.maximum(ckept_idx, 0).reshape(-1)
+    dst = jnp.where(flat_keep, new_slot_flat, MV)
+    ver_value = jnp.zeros((MV,), i32).at[dst].set(store.ver_value[src], mode="drop")
+    ver_ts = jnp.zeros((MV,), i32).at[dst].set(store.ver_ts[src], mode="drop")
+    # chain: version j links to version j+1 of the same key (newest-first)
+    nxt_in_key = jnp.concatenate(
+        [new_slot[:, 1:], jnp.full((N, 1), -1, i32)], axis=1
+    ).reshape(-1)
+    ver_next = jnp.full((MV,), -1, i32).at[dst].set(
+        jnp.where(nxt_in_key >= 0, nxt_in_key, -1), mode="drop"
+    )
+    new_vhead = new_slot[:, 0]
+
+    # rebuild packed leaves at pack_fill occupancy
+    F = cfg.pack_fill
+    n_new_leaves = jnp.maximum((n_live + F - 1) // F, 1)
+    kidx = jnp.arange(N, dtype=i32)
+    dleaf = kidx // F
+    dslot = kidx % F
+    kvalid = kidx < n_live
+    leaf_keys = jnp.full((ML, L), KEY_MAX, i32).at[
+        jnp.where(kvalid, dleaf, ML), dslot
+    ].set(ckeys, mode="drop")
+    leaf_vhead = jnp.full((ML, L), -1, i32).at[
+        jnp.where(kvalid, dleaf, ML), dslot
+    ].set(new_vhead, mode="drop")
+    lrange = jnp.arange(ML, dtype=i32)
+    leaf_count = jnp.clip(n_live - lrange * F, 0, F).astype(i32)
+    leaf_count = jnp.where(lrange < n_new_leaves, leaf_count, 0)
+    leaf_next = jnp.where(
+        lrange + 1 < n_new_leaves, lrange + 1, -1
+    ).astype(i32)
+    dir_keys = jnp.where(
+        lrange < n_new_leaves,
+        leaf_keys[jnp.minimum(lrange, ML - 1), 0],
+        KEY_MAX,
+    ).astype(i32)
+    dir_keys = dir_keys.at[0].set(KEY_MIN)
+    dir_leaf = jnp.where(lrange < n_new_leaves, lrange, -1).astype(i32)
+
+    new = dataclasses.replace(
+        store,
+        leaf_keys=leaf_keys,
+        leaf_vhead=leaf_vhead,
+        leaf_count=leaf_count,
+        leaf_next=leaf_next,
+        leaf_newnext=jnp.full((ML,), -1, i32),
+        leaf_frozen=jnp.zeros((ML,), bool),
+        leaf_ts=jnp.full((ML,), store.ts, i32),
+        n_alloc=n_new_leaves.astype(i32),
+        dir_keys=dir_keys,
+        dir_leaf=dir_leaf,
+        n_leaves=n_new_leaves.astype(i32),
+        ver_value=ver_value,
+        ver_ts=ver_ts,
+        ver_next=ver_next,
+        n_vers=n_new_vers,
+        oflow=jnp.array(0, jnp.int32),
+    )
+    return new, n_live
+
+
+# ---------------------------------------------------------------------------
+# Introspection (host-side; tests)
+# ---------------------------------------------------------------------------
+
+def live_items(store: UruvStore):
+    """All (key, latest non-tombstone value); host-side, for tests."""
+    import numpy as np
+
+    s = jax.device_get(store)
+    out = []
+    n_leaves = int(s.n_leaves)
+    for p in range(n_leaves):
+        lid = int(s.dir_leaf[p])
+        cnt = int(s.leaf_count[lid])
+        for j in range(cnt):
+            k = int(s.leaf_keys[lid, j])
+            vh = int(s.leaf_vhead[lid, j])
+            if vh < 0:
+                continue
+            v = int(s.ver_value[vh])
+            if v != TOMBSTONE:
+                out.append((k, v))
+    return out
+
+
+def check_invariants(store: UruvStore) -> None:
+    """Paper Appendix B invariants + directory coherence. Host-side."""
+    import numpy as np
+
+    s = jax.device_get(store)
+    nl = int(s.n_leaves)
+    assert nl >= 1
+    dirk = np.asarray(s.dir_keys[:nl])
+    assert dirk[0] == KEY_MIN
+    assert np.all(np.diff(dirk.astype(np.int64)) > 0), "directory not strictly sorted"
+    prev_last = None
+    for p in range(nl):
+        lid = int(s.dir_leaf[p])
+        cnt = int(s.leaf_count[lid])
+        row = np.asarray(s.leaf_keys[lid])
+        assert np.all(row[cnt:] == KEY_MAX), "leaf padding violated"
+        if cnt:
+            assert np.all(np.diff(row[:cnt].astype(np.int64)) > 0), (
+                "invariant 1: leaf not sorted/unique"
+            )
+            if p > 0:
+                assert row[0] >= dirk[p], "leaf underflows its separator"
+            if prev_last is not None:
+                assert row[0] > prev_last, "invariant 2: inter-leaf order"
+            prev_last = row[cnt - 1]
+        # chain coherence
+        expected_next = int(s.dir_leaf[p + 1]) if p + 1 < nl else -1
+        assert int(s.leaf_next[lid]) == expected_next, "leaf_next chain broken"

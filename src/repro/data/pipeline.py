@@ -1,0 +1,163 @@
+"""Data pipeline: synthetic corpus + packing + Uruv streaming sample store.
+
+The sample store is the paper's streaming-analytics use case verbatim
+(Sec 1: real-time ingestion + consistent scans): producers INSERT samples
+as they arrive; epoch readers take a SNAPSHOT and RANGEQUERY shard ranges —
+readers never block producers and always see a consistent epoch.
+
+Determinism & fault tolerance: batches are a pure function of
+(seed, step), so restart-after-crash resumes the stream exactly
+(repro.checkpoint records the step).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.core import batch as uruv_batch
+from repro.core import store as uruv_store
+
+
+# ---------------------------------------------------------------------------
+# synthetic corpus (a Zipfian Markov chain -> learnable structure)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SyntheticCorpus:
+    vocab: int
+    seed: int = 0
+    order_mod: int = 97
+
+    def tokens(self, n: int, stream_seed: int) -> np.ndarray:
+        """Deterministic pseudo-corpus: t_{i+1} = f(t_i) + noise (learnable)."""
+        rng = np.random.default_rng((self.seed, stream_seed))
+        out = np.empty(n, np.int32)
+        t = int(rng.integers(0, self.vocab))
+        zipf_pool = (rng.zipf(1.5, size=4096) - 1) % self.vocab
+        for i in range(n):
+            out[i] = t
+            if rng.random() < 0.75:
+                t = (t * 31 + 17) % self.vocab          # deterministic bigram
+            else:
+                t = int(zipf_pool[int(rng.integers(0, 4096))])
+        return out
+
+
+def make_batch(
+    cfg: ArchConfig, B: int, S: int, step: int, seed: int = 0
+) -> Dict[str, jnp.ndarray]:
+    """Pure function of (cfg, step): the batch for one train step."""
+    corpus = SyntheticCorpus(cfg.vocab, seed)
+    if cfg.encoder_only:
+        rng = np.random.default_rng((seed, step, 1))
+        emb = rng.standard_normal((B, S, cfg.d_model), np.float32) * 0.5
+        labels = rng.integers(0, cfg.vocab, (B, S)).astype(np.int32)
+        mask = rng.random((B, S)) < 0.08        # masked-prediction positions
+        return {
+            "embeds": jnp.asarray(emb, jnp.float32),
+            "labels": jnp.asarray(labels),
+            "mask": jnp.asarray(mask),
+        }
+    toks = corpus.tokens(B * (S + 1), stream_seed=step).reshape(B, S + 1)
+    batch = {
+        "tokens": jnp.asarray(toks[:, :-1]),
+        "labels": jnp.asarray(toks[:, 1:]),
+        "mask": jnp.ones((B, S), jnp.bool_),
+    }
+    if cfg.vlm is not None:
+        rng = np.random.default_rng((seed, step, 2))
+        batch["patches"] = jnp.asarray(
+            rng.standard_normal(
+                (B, cfg.vlm.n_patches, cfg.vlm.patch_dim)) * 0.5,
+            jnp.float32,
+        )
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# Uruv-backed streaming sample store
+# ---------------------------------------------------------------------------
+
+class StreamingSampleStore:
+    """Samples keyed by monotonically increasing id, values = corpus offsets.
+
+    * ``ingest(ids, offsets)``     — producer INSERTs (wait-free bulk pass)
+    * ``epoch_view()``             — snapshot ts for a consistent epoch
+    * ``read_shard(lo, hi, snap)`` — RANGEQUERY a shard of sample ids
+    * ``retire_below(id)``         — DELETE consumed samples (tombstones);
+                                     physical reclaim via compact()
+    """
+
+    def __init__(self, cfg: Optional[uruv_store.UruvConfig] = None):
+        self.store = uruv_store.create(cfg or uruv_store.UruvConfig())
+
+    def ingest(self, ids: np.ndarray, offsets: np.ndarray) -> None:
+        self.store, _ = uruv_batch.apply_updates(
+            self.store, ids.astype(np.int32), offsets.astype(np.int32)
+        )
+
+    def epoch_view(self) -> int:
+        self.store, snap = uruv_store.snapshot(self.store)
+        return int(snap)
+
+    def release(self, snap: int) -> None:
+        self.store = uruv_store.release(self.store, snap)
+
+    def read_shard(self, lo: int, hi: int, snap: int) -> List[Tuple[int, int]]:
+        self.store, out = uruv_batch.range_query_all(
+            self.store, lo, hi, snap
+        )
+        return out
+
+    def retire_below(self, sample_id: int, batch_width: int = 256) -> None:
+        snap = self.epoch_view()
+        items = self.read_shard(0, sample_id - 1, snap)
+        self.release(snap)
+        ids = np.array([k for k, _ in items], np.int32)
+        for i in range(0, len(ids), batch_width):
+            chunk = ids[i : i + batch_width]
+            vals = np.full(chunk.shape, uruv_store.TOMBSTONE, np.int32)
+            self.store, _ = uruv_batch.apply_updates(self.store, chunk, vals)
+
+    def compact(self) -> int:
+        self.store, n_live = uruv_store.compact(self.store)
+        return int(n_live)
+
+    def live_count(self) -> int:
+        snap = self.epoch_view()
+        items = self.read_shard(0, 2**31 - 3, snap)
+        self.release(snap)
+        return len(items)
+
+
+def epoch_iterator(
+    store: StreamingSampleStore,
+    corpus: SyntheticCorpus,
+    cfg: ArchConfig,
+    B: int,
+    S: int,
+    n_shards: int = 1,
+    shard: int = 0,
+) -> Iterator[Dict[str, jnp.ndarray]]:
+    """Consume a consistent epoch of the sample store shard-by-shard."""
+    snap = store.epoch_view()
+    try:
+        items = store.read_shard(0, 2**31 - 3, snap)
+        mine = [off for sid, off in items if sid % n_shards == shard]
+        for i in range(0, len(mine) - B + 1, B):
+            offs = mine[i : i + B]
+            toks = np.stack(
+                [corpus.tokens(S + 1, stream_seed=o) for o in offs]
+            )
+            yield {
+                "tokens": jnp.asarray(toks[:, :-1]),
+                "labels": jnp.asarray(toks[:, 1:]),
+                "mask": jnp.ones((B, S), jnp.bool_),
+            }
+    finally:
+        store.release(snap)

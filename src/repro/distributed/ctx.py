@@ -1,0 +1,120 @@
+"""Activation-sharding context.
+
+Model code calls ``shard_act(x, kind)`` at a few key points (residual
+stream, logits, KV cache).  Outside a mesh context these are no-ops, so
+smoke tests and single-device runs never touch jax device state.  The step
+builders (repro.train.steps / repro.launch.dryrun) install the context.
+
+Kinds (axes refer to the production mesh of DESIGN.md Sec 5):
+  residual  [B, S, D]      B -> (pod, data);  S -> model if sequence_parallel
+  tokens    [B, S]         B -> (pod, data)
+  logits    [B, S, V]      B -> (pod, data);  V -> model
+  kv_cache  [L, B, KVH, S, D]   B -> (pod, data);  S -> model
+  seq_shard [..., S, ...]  long-context decode: S over every mesh axis
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX: contextvars.ContextVar[Optional["ShardCtx"]] = contextvars.ContextVar(
+    "repro_shard_ctx", default=None
+)
+
+
+class ShardCtx:
+    def __init__(self, mesh: Mesh, *, sequence_parallel: bool = True,
+                 long_context: bool = False):
+        self.mesh = mesh
+        self.sequence_parallel = sequence_parallel
+        self.long_context = long_context
+        names = mesh.axis_names
+        self.batch_axes: Tuple[str, ...] = tuple(
+            a for a in ("pod", "data") if a in names
+        )
+        self.model_axis: Optional[str] = "model" if "model" in names else None
+
+    def spec(self, kind: str, ndim: int) -> Optional[P]:
+        b = self.batch_axes if self.batch_axes else None
+        m = self.model_axis
+        sp = m if self.sequence_parallel else None
+        if kind == "residual":
+            return P(b, sp, None)
+        if kind == "tokens":
+            return P(b, None)
+        if kind == "logits":
+            return P(b, None, m)
+        if kind == "kv_cache":
+            return P(None, b, None, m, None)
+        if kind == "ssm_state":  # [L, B, heads, ...]
+            return P(None, b, m, *([None] * (ndim - 3)))
+        if kind == "moe_tokens":      # [T, D] flattened tokens pre-dispatch
+            return P(b, None)
+        if kind == "moe_experts":     # [E, C, D] dispatched expert blocks
+            return P(m, b, None)      # EP over model, capacity over data
+        if kind == "moe_weight":      # [E, D, F] gather-on-use (ZeRO): drop
+            return P(m, None, None)   # the FSDP axis inside the layer
+        if kind == "kv4":
+            # per-layer decode cache [B, KVH, S, hd] — MUST match the
+            # cache's resident sharding (batch over data, seq over model;
+            # long-context: seq over every axis). A conflicting constraint
+            # here re-gathers the whole cache per layer (EXPERIMENTS.md
+            # §Perf iteration 1).
+            if self.long_context:
+                all_axes = tuple(b or ()) + ((m,) if m else ())
+                return P(None, None, all_axes if all_axes else None, None)
+            return P(b, None, m, None)
+        if kind == "seq_shard":
+            # batch=1 long-context: sequence over the whole mesh
+            all_axes = tuple(a for a in (b or ())) + ((m,) if m else ())
+            spec = [None] * ndim
+            spec[-2] = all_axes if all_axes else None
+            return P(*spec)
+        return None
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], *, sequence_parallel: bool = True,
+             long_context: bool = False):
+    tok = _CTX.set(
+        ShardCtx(mesh, sequence_parallel=sequence_parallel,
+                 long_context=long_context)
+        if mesh else None
+    )
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)
+
+
+def _guard(spec: P, shape, mesh: Mesh) -> P:
+    """Drop axes that do not divide the corresponding dim (replicate)."""
+    out = []
+    for d, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        out.append(entry if shape[d] % n == 0 else None)
+    return P(*out)
+
+
+def shard_act(x: jax.Array, kind: str) -> jax.Array:
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    spec = ctx.spec(kind, x.ndim)
+    if spec is None:
+        return x
+    spec = _guard(spec, x.shape, ctx.mesh)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec)
+    )

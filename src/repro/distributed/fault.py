@@ -1,0 +1,128 @@
+"""Fault tolerance: straggler monitoring, crash/restart, elastic resharding.
+
+At 1000+ nodes the failure model is: slow hosts (stragglers), dead hosts
+(crash -> restart from snapshot checkpoint), and resizes (elastic).  The
+pieces here are host-level and deterministic, hence testable on CPU:
+
+  * StragglerMonitor — EWMA + MAD step-time detector; pluggable actions
+    (shrink microbatch, flag host, trigger checkpoint).
+  * run_with_restarts — crash-simulating train-loop driver used by tests:
+    training is a pure function of (checkpoint, data stream step), so a
+    restart reproduces the exact trajectory.
+  * reshard — move a state pytree onto a new mesh (elastic scale up/down);
+    combined with CheckpointManager.restore(shardings=...) this is the
+    checkpoint -> resize -> resume path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    duration: float
+    median: float
+    factor: float
+
+
+class StragglerMonitor:
+    """Flags steps slower than ``factor`` x running median (+ MAD guard)."""
+
+    def __init__(self, window: int = 32, factor: float = 2.5,
+                 min_samples: int = 5):
+        self.window = window
+        self.factor = factor
+        self.min_samples = min_samples
+        self.durations: List[float] = []
+        self.events: List[StragglerEvent] = []
+        self.actions: List[Callable[[StragglerEvent], None]] = []
+
+    def on_straggler(self, fn: Callable[[StragglerEvent], None]) -> None:
+        self.actions.append(fn)
+
+    def record(self, step: int, duration: float) -> Optional[StragglerEvent]:
+        hist = self.durations[-self.window:]
+        self.durations.append(duration)
+        if len(hist) < self.min_samples:
+            return None
+        med = statistics.median(hist)
+        mad = statistics.median([abs(x - med) for x in hist]) or 1e-9
+        if duration > self.factor * med and duration > med + 6 * mad:
+            ev = StragglerEvent(step, duration, med, duration / med)
+            self.events.append(ev)
+            for fn in self.actions:
+                fn(ev)
+            return ev
+        return None
+
+    def timed(self, step: int):
+        mon = self
+
+        class _Timer:
+            def __enter__(self):
+                self.t0 = time.perf_counter()
+                return self
+
+            def __exit__(self, *exc):
+                mon.record(step, time.perf_counter() - self.t0)
+
+        return _Timer()
+
+
+def reshard(tree, shardings):
+    """Elastic move of a pytree onto new shardings (new mesh ok)."""
+    host = jax.device_get(tree)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), host, shardings)
+
+
+def run_with_restarts(
+    *,
+    init_fn: Callable[[], Tuple],          # () -> state
+    step_fn: Callable,                      # (state, batch) -> (state, metrics)
+    batch_fn: Callable[[int], Dict],        # step -> batch (deterministic)
+    ckpt,                                   # CheckpointManager
+    total_steps: int,
+    ckpt_every: int = 10,
+    crash_at: Optional[List[int]] = None,   # simulated host deaths
+):
+    """Crash-tolerant training driver.
+
+    On (simulated) crash: drop all live state, restore the latest complete
+    checkpoint, resume the deterministic data stream at the restored step.
+    Returns (final_state, per-step metrics including replays).
+    """
+    crash_at = sorted(crash_at or [])
+    history = []
+    state = None
+    step = 0
+    latest = ckpt.latest_step()
+    if latest is not None:
+        state, step = ckpt.restore(jax.eval_shape(init_fn))
+    else:
+        state = init_fn()
+        ckpt.save(state, 0)
+
+    while step < total_steps:
+        if crash_at and step == crash_at[0]:
+            crash_at.pop(0)
+            ckpt.wait()
+            state = None                     # simulate losing device state
+            restored, rstep = ckpt.restore(jax.eval_shape(init_fn))
+            history.append(("restart", step, rstep))
+            state, step = restored, rstep
+            continue
+        batch = batch_fn(step)
+        state, metrics = step_fn(state, batch)
+        step += 1
+        history.append(("step", step, float(metrics.get("loss", 0.0))))
+        if step % ckpt_every == 0:
+            ckpt.save(state, step)
+    ckpt.wait()
+    return state, history

@@ -1,0 +1,177 @@
+"""Sharding rules: param-name-pattern -> PartitionSpec, with guards.
+
+DP over (pod, data); TP over model (Megatron column/row); EP for MoE experts
+over model; FSDP (params + optimizer state over data) optional; SP for the
+residual stream handled by repro.distributed.ctx.
+
+Every rule is guarded by divisibility — a dim that does not divide by its
+mesh axis falls back to replication, so all ten architectures lower on the
+same mesh without per-arch special cases.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    fsdp: bool = True           # shard params/opt-state over data axis too
+    sequence_parallel: bool = True
+
+
+def _ax(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _fits(shape, dim, n) -> bool:
+    return 0 <= dim < len(shape) and shape[dim] % n == 0 and shape[dim] >= n
+
+
+def _batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def param_spec(
+    path: str, shape: Tuple[int, ...], mesh: Mesh, policy: ShardingPolicy
+) -> P:
+    """Sharding for one parameter, identified by its tree path."""
+    model_n = _ax(mesh, "model")
+    data_axes = _batch_axes(mesh)
+    data_n = 1
+    for a in data_axes:
+        data_n *= mesh.shape[a]
+    nd = len(shape)
+    spec = [None] * nd
+    name = path.split("/")[-1]
+
+    def set_model(dim: int) -> bool:
+        d = dim % nd
+        if model_n > 1 and _fits(shape, d, model_n) and spec[d] is None:
+            spec[d] = "model"
+            return True
+        return False
+
+    def set_fsdp(preferred: Tuple[int, ...]):
+        if not policy.fsdp or data_n <= 1:
+            return
+        for dim in preferred:
+            d = dim % nd
+            if spec[d] is None and _fits(shape, d, data_n):
+                spec[d] = data_axes if len(data_axes) > 1 else data_axes[0]
+                return
+
+    if name in ("embed",):                      # [V, D]
+        set_model(-2)
+        set_fsdp((-1,))
+    elif name in ("unembed",):                  # [D, V]
+        set_model(-1)
+        set_fsdp((-2,))
+    elif name in ("wq", "wk", "wv"):            # [*, D, H|KVH, hd]
+        if not set_model(-2):                   # heads over model (TP)
+            set_model(-3)                       # else contract dim
+        set_fsdp((-3, -1))
+    elif name == "wo":                          # [*, H, hd, D]
+        set_model(-3)
+        set_fsdp((-1,))
+    elif name in ("w1", "w3", "up", "in_proj"):  # [*, (E,) D, F]
+        if len(shape) >= 4 or "moe" in path:    # moe experts [*, E, D, F]
+            set_model(-3)                       # EP: experts over model
+            set_fsdp((-1,))
+        else:
+            set_model(-1)                       # column parallel
+            set_fsdp((-2,))
+    elif name in ("w2", "out_proj", "down", "out"):  # [*, (E,) F, D]
+        if "moe" in path and len(shape) >= 4:
+            set_model(-3)
+            set_fsdp((-2,))
+        else:
+            set_model(-2)                       # row parallel
+            set_fsdp((-1,))
+    elif name == "conv_w":                      # [*, K, C]
+        set_model(-1)
+    elif name in ("W",):                        # slstm [*, d, nh, 4, hd]
+        set_model(-1)
+        set_fsdp((-4,))
+    elif name in ("R",):                        # slstm [*, nh, hd, 4, hd]
+        set_model(-1)
+    elif name == "router":                      # [*, D, E]
+        set_fsdp((-2,))
+    # 1-D / small params (norm scales, biases, gates): replicate.
+    return P(*spec)
+
+
+def param_shardings(param_tree, mesh: Mesh, policy: ShardingPolicy):
+    """Pytree of NamedShardings congruent with ``param_tree``."""
+
+    def visit(path, leaf):
+        pstr = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        return NamedSharding(
+            mesh, param_spec(pstr, leaf.shape, mesh, policy)
+        )
+
+    return jax.tree_util.tree_map_with_path(visit, param_tree)
+
+
+def batch_specs(batch_tree, mesh: Mesh, *, long_context: bool = False):
+    """Shardings for step inputs (tokens/labels/patches/cache/...)."""
+    b = _batch_axes(mesh)
+    b = b if len(b) > 1 else (b[0] if b else None)
+    model = "model" if "model" in mesh.axis_names else None
+
+    def visit(path, leaf):
+        names = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        top = names[0] if names else ""
+        nd = len(leaf.shape)
+        spec = [None] * nd
+        if top in ("k", "v", "attn_k", "attn_v") or "cache" in names[:2]:
+            # KV cache [L, B, KVH, S, hd] or ssm state [L, B, H, ...]
+            if nd == 5 and leaf.shape[3] > 256:   # kv cache: seq dim big
+                if long_context:
+                    spec[3] = tuple(a for a in ("pod", "data", "model")
+                                    if a in mesh.axis_names)
+                else:
+                    if leaf.shape[1] % _pn(mesh, b) == 0:
+                        spec[1] = b
+                    if model and leaf.shape[3] % mesh.shape["model"] == 0:
+                        spec[3] = model
+            else:
+                if nd >= 2 and not long_context and leaf.shape[1] % _pn(mesh, b) == 0:
+                    spec[1] = b
+                if (nd >= 3 and model
+                        and leaf.shape[2] % mesh.shape["model"] == 0):
+                    spec[2] = model
+        else:
+            # plain batch-major arrays: tokens/labels/mask/embeds/patches
+            if nd >= 1 and leaf.shape[0] % _pn(mesh, b) == 0:
+                spec[0] = b
+            if top == "embeds" and nd == 3 and model and (
+                leaf.shape[1] % mesh.shape["model"] == 0):
+                spec[1] = model   # SP on provided frame embeddings
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(visit, batch_tree)
+
+
+def _pn(mesh: Mesh, b) -> int:
+    if b is None:
+        return 1
+    if isinstance(b, str):
+        return mesh.shape[b]
+    n = 1
+    for a in b:
+        n *= mesh.shape[a]
+    return n
+
+
+def named(tree_specs, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

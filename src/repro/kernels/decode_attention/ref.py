@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for flash-decode."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+@jax.jit
+def decode_attention_ref(q, k, v, lengths):
+    """q [B,H,D], k/v [B,KVH,S,D], lengths [B] -> [B,H,D]."""
+    B, H, D = q.shape
+    _, KVH, S, _ = k.shape
+    group = H // KVH
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32), kx.astype(jnp.float32))
+    s = s / (D ** 0.5)
+    mask = jnp.arange(S)[None, None, :] < lengths[:, None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhk,bhkd->bhd", p, vx.astype(jnp.float32))
+    return out.astype(q.dtype)

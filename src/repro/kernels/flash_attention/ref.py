@@ -1,0 +1,40 @@
+"""Pure-jnp dense attention oracle (causal / sliding-window / GQA)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def attention_ref(
+    q: jax.Array,      # [B, H, Sq, D]
+    k: jax.Array,      # [B, KVH, Skv, D]
+    v: jax.Array,      # [B, KVH, Skv, D]
+    *,
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    B, H, Sq, D = q.shape
+    _, KVH, Skv, _ = k.shape
+    group = H // KVH
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), kx.astype(jnp.float32)
+    ) / (D ** 0.5)
+    qi = jnp.arange(Sq)[:, None]
+    ki = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= qi >= ki
+    if window > 0:
+        mask &= qi - ki < window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vx.astype(jnp.float32))
+    return out.astype(q.dtype)

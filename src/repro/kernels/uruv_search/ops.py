@@ -1,0 +1,42 @@
+"""Jitted public wrappers for the uruv_search kernels.
+
+``locate()`` is the full traversal contract used by the store (directory
+rank -> leaf gather -> in-leaf slot), switchable between the Pallas path and
+the XLA oracle. The store's default (`repro.core.store._locate`) is the XLA
+path so that multi-pod dry-runs lower on any backend; the Pallas path is the
+TPU deployment configuration (see DESIGN.md Sec 7).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.uruv_search.uruv_search import leaf_slots, search_positions
+from repro.kernels.uruv_search.ref import leaf_slots_ref, search_positions_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def locate(
+    dir_keys: jax.Array,
+    dir_leaf: jax.Array,
+    leaf_keys: jax.Array,
+    queries: jax.Array,
+    *,
+    use_pallas: bool = True,
+    interpret: bool = True,
+):
+    """Returns (dir_pos, leaf_id, slot, exists) for a query batch."""
+    if use_pallas:
+        pos = search_positions(dir_keys, queries, interpret=interpret)
+    else:
+        pos = search_positions_ref(dir_keys, queries)
+    leaf_id = dir_leaf[pos]
+    rows = leaf_keys[leaf_id]
+    if use_pallas:
+        slot, exists = leaf_slots(rows, queries, interpret=interpret)
+    else:
+        slot, exists = leaf_slots_ref(rows, queries)
+    return pos, leaf_id, slot, exists

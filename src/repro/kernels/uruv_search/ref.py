@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the uruv_search kernels."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def search_positions_ref(dir_keys: jax.Array, queries: jax.Array) -> jax.Array:
+    pos = jnp.searchsorted(dir_keys, queries, side="right").astype(jnp.int32) - 1
+    return jnp.maximum(pos, 0)
+
+
+@jax.jit
+def leaf_slots_ref(rows: jax.Array, queries: jax.Array):
+    L = rows.shape[1]
+    slot = jnp.sum(rows < queries[:, None], axis=1).astype(jnp.int32)
+    hit = jnp.take_along_axis(rows, jnp.minimum(slot, L - 1)[:, None], axis=1)[:, 0]
+    exists = (slot < L) & (hit == queries)
+    return slot, exists

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for versioned_read (bounded chain walk via XLA gather)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ref import NOT_FOUND, TOMBSTONE
+
+
+@functools.partial(jax.jit, static_argnames=("max_chain",))
+def versioned_read_ref(
+    vhead, snap_ts, ver_ts, ver_next, ver_value, *, max_chain: int = 16
+):
+    snap = jnp.broadcast_to(snap_ts, vhead.shape)
+    cur = vhead
+    for _ in range(max_chain):
+        safe = jnp.maximum(cur, 0)
+        adv = (cur >= 0) & (ver_ts[safe] > snap)
+        cur = jnp.where(adv, ver_next[safe], cur)
+    safe = jnp.maximum(cur, 0)
+    ok = (cur >= 0) & (ver_ts[safe] <= snap)
+    val = jnp.where(ok, ver_value[safe], NOT_FOUND)
+    return jnp.where(val == TOMBSTONE, NOT_FOUND, val)

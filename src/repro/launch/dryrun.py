@@ -1,0 +1,263 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: builds the
+production mesh from placeholder devices, lowers the real train/serve step
+with ShapeDtypeStruct inputs (no allocation), compiles, and records
+memory/cost/collective analyses per cell under experiments/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3_2_1b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all            # every applicable cell (cached)
+  python -m repro.launch.dryrun --all --force    # recompute
+"""
+
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+COLLECTIVE_RE = re.compile(
+    r"=\s+(\w+)\[([\d,]*)\]"          # result dtype[shape]
+    r"[^=]*?\b"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)\b"
+)
+
+DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "pred": 1, "s8": 1, "u8": 1, "f64": 8, "s16": 2, "u16": 2,
+}
+
+# bytes-on-wire factor per algorithm (ring; group size n -> (n-1)/n ~= 1)
+WIRE_FACTOR = {
+    "all-reduce": 2.0,          # reduce-scatter + all-gather
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def collective_bytes(hlo_text: str):
+    """Sum bytes moved per collective type from partitioned HLO text."""
+    per_type = {}
+    count = {}
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        dt, shape_s, op = m.group(1), m.group(2), m.group(3)
+        elems = 1
+        if shape_s:
+            for p in shape_s.split(","):
+                if p:
+                    elems *= int(p)
+        nbytes = elems * DTYPE_BYTES.get(dt, 4) * WIRE_FACTOR[op]
+        per_type[op] = per_type.get(op, 0.0) + nbytes
+        count[op] = count.get(op, 0) + 1
+    return per_type, count
+
+
+def run_cell(arch_id: str, shape_id: str, mesh_kind: str) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.config import SHAPES, get_arch, shape_applicable
+    from repro.distributed import sharding as shd
+    from repro.distributed.ctx import use_mesh
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.registry import input_specs, param_shapes
+    from repro.optim import adamw
+    from repro.train import steps
+
+    cfg = get_arch(arch_id)
+    shape = SHAPES[shape_id]
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        return {"status": "SKIP", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    policy = shd.ShardingPolicy(
+        fsdp=True, sequence_parallel=cfg.sequence_parallel
+    )
+    long_ctx = shape.name == "long_500k"
+
+    t0 = time.time()
+    pshapes = param_shapes(cfg)
+    pshard = shd.param_shardings(pshapes, mesh, policy)
+    batch_sds = input_specs(cfg, shape)
+    bspecs = shd.batch_specs(batch_sds, mesh, long_context=long_ctx)
+    bshard = shd.named(bspecs, mesh)
+
+    def with_sharding(sds_tree, shard_tree):
+        return jax.tree.map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            sds_tree, shard_tree,
+        )
+
+    with use_mesh(mesh, sequence_parallel=cfg.sequence_parallel and not long_ctx,
+                  long_context=long_ctx):
+        if shape.kind == "train":
+            opt_cfg = adamw.AdamWConfig()
+            step_fn = steps.make_train_step(cfg, opt_cfg)
+            state_sds = jax.eval_shape(
+                lambda p: steps.TrainState(
+                    params=p, opt=adamw.init(p),
+                    step=jnp.zeros((), jnp.int32)),
+                pshapes,
+            )
+            scalar = jax.NamedSharding(mesh, shd.P())
+            state_shard = steps.TrainState(
+                params=pshard,
+                opt=adamw.OptState(m=pshard, v=pshard, step=scalar),
+                step=scalar,
+            )
+            args = (
+                with_sharding(state_sds, state_shard),
+                with_sharding(batch_sds, bshard),
+            )
+            jitted = jax.jit(step_fn, donate_argnums=(0,))
+        elif shape.kind == "prefill":
+            step_fn = steps.make_prefill_step(cfg)
+            args = (
+                with_sharding(pshapes, pshard),
+                with_sharding(batch_sds, bshard),
+            )
+            jitted = jax.jit(step_fn)
+        else:  # decode
+            step_fn = steps.make_serve_step(cfg)
+            args = (
+                with_sharding(pshapes, pshard),
+                with_sharding(batch_sds, bshard),
+            )
+            jitted = jax.jit(step_fn, donate_argnums=(1,))
+
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            if hasattr(ma, k):
+                mem[k] = int(getattr(ma, k))
+    except Exception as e:  # pragma: no cover
+        mem["error"] = str(e)
+
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        for k, v in ca.items():
+            if k in ("flops", "bytes accessed", "optimal_seconds") or \
+               k.startswith("bytes accessed"):
+                cost[k] = float(v)
+    except Exception as e:  # pragma: no cover
+        cost["error"] = str(e)
+
+    text = compiled.as_text()
+    per_type, counts = collective_bytes(text)
+
+    # persist the partitioned HLO for offline roofline parsing
+    import gzip
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    hlo_path = RESULTS_DIR / f"{arch_id}__{shape_id}__{mesh_kind}.hlo.gz"
+    with gzip.open(hlo_path, "wt") as f:
+        f.write(text)
+
+    n_chips = 1
+    for v in mesh.shape.values():
+        n_chips *= v
+
+    return {
+        "status": "OK",
+        "arch": arch_id,
+        "shape": shape_id,
+        "mesh": mesh_kind,
+        "mesh_shape": dict(mesh.shape),
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory_analysis": mem,
+        "cost_analysis": cost,
+        "collective_bytes": per_type,
+        "collective_counts": counts,
+        "hlo_bytes": len(text),
+    }
+
+
+def cell_path(arch_id, shape_id, mesh_kind) -> Path:
+    return RESULTS_DIR / f"{arch_id}__{shape_id}__{mesh_kind}.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--timeout", type=int, default=3000)
+    args = ap.parse_args()
+
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+
+    if not args.all:
+        out = run_cell(args.arch, args.shape, args.mesh)
+        p = cell_path(args.arch, args.shape, args.mesh)
+        p.write_text(json.dumps(out, indent=2))
+        print(json.dumps(out, indent=2))
+        sys.exit(0 if out["status"] in ("OK", "SKIP") else 1)
+
+    # driver: every cell in its own subprocess (isolation + resumability)
+    from repro.config import ARCH_IDS, SHAPES
+
+    todo = [
+        (a, s, m)
+        for a in ARCH_IDS
+        for s in SHAPES
+        for m in ("single", "multi")
+    ]
+    failures = []
+    for a, s, m in todo:
+        p = cell_path(a, s, m)
+        if p.exists() and not args.force:
+            st = json.loads(p.read_text()).get("status")
+            print(f"[cache] {a} {s} {m}: {st}")
+            continue
+        print(f"[run  ] {a} {s} {m} ...", flush=True)
+        t0 = time.time()
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun",
+             "--arch", a, "--shape", s, "--mesh", m],
+            capture_output=True, text=True, timeout=args.timeout,
+            env=dict(os.environ, PYTHONPATH="src"),
+            cwd=str(RESULTS_DIR.parents[1]),
+        )
+        dt = time.time() - t0
+        if r.returncode != 0:
+            failures.append((a, s, m))
+            p.write_text(json.dumps({
+                "status": "FAIL", "arch": a, "shape": s, "mesh": m,
+                "stderr": r.stderr[-4000:],
+            }, indent=2))
+            print(f"[FAIL ] {a} {s} {m} ({dt:.0f}s)\n{r.stderr[-1500:]}")
+        else:
+            st = json.loads(p.read_text()).get("status")
+            print(f"[done ] {a} {s} {m}: {st} ({dt:.0f}s)")
+    print(f"\n{len(failures)} failures: {failures}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

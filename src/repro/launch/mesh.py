@@ -1,0 +1,27 @@
+"""Production mesh builders.
+
+Functions (never module-level constants) so importing this module never
+touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 chips per pod; the multi-pod mesh adds a leading pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over local devices (tests, examples)."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(AxisType.Auto, AxisType.Auto),
+    )

@@ -1,0 +1,523 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+XLA's ``cost_analysis()`` counts while-loop bodies ONCE (scan'd layers would
+be undercounted ~L-fold), so this module re-derives costs from the
+partitioned HLO text with **loop-aware multipliers**:
+
+  1. parse computations + an instruction name -> bytes map,
+  2. per computation: dot FLOPs (2 * result_elems * contracted_size),
+     HBM bytes (operands + results at fusion boundaries — post-optimization
+     top-level ops ARE the HBM traffic), collective bytes by type,
+  3. walk the call graph from ENTRY: while bodies multiply by the trip
+     count parsed from their condition (scan conditions compare the
+     induction variable against a constant), conditionals take a branch
+     weight (upper bound 1.0 by default; zamba's shared-attention branch
+     runs 1/hybrid_attn_every of iterations and is corrected analytically),
+  4. roofline terms per chip against v5e constants.
+
+Terms (seconds/step/chip):
+  compute    = dot_flops / 197e12          (bf16 MXU peak)
+  memory     = hbm_bytes / 819e9           (HBM bandwidth)
+  collective = wire_bytes / (ici_links * 50e9)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import gzip
+import json
+import re
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 / chip (v5e)
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+ICI_LINKS = 4                # usable links per chip on a 2D torus (v5e)
+
+DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "pred": 1, "s8": 1, "u8": 1, "f64": 8, "s16": 2, "u16": 2, "f8e4m3": 1,
+    "f8e5m2": 1, "c64": 8, "token": 0, "s4": 1, "u4": 1,
+}
+
+WIRE_FACTOR = {
+    "all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+    "all-to-all": 1.0, "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->.*\{")
+_OPND_RE = re.compile(r"%([\w.\-]+)")
+
+FREE_OPS = (
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+    # dtype legalization: XLA-CPU materializes bf16<->f32 converts that fuse
+    # away (or never exist) on TPU — counting them would bias the memory
+    # term by the backend, not the program (EXPERIMENTS.md methodology).
+    "convert",
+)
+
+# ops with in-place / sparse-access semantics: count moved bytes, not the
+# full buffers they are threaded through
+INPLACE_OPS = ("dynamic-update-slice", "scatter")
+SPARSE_READ_OPS = ("gather", "dynamic-slice")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _fusion_bytes(rhs: str, opnd_list, res_bytes: int, name_bytes,
+                  comps) -> float:
+    """HBM traffic of one fusion op, aware of fused sparse access."""
+    cm = re.search(r"calls=%?([\w.\-]+)", rhs)
+    body = comps.get(cm.group(1)) if cm else None
+    if body is None:
+        return res_bytes + sum(name_bytes.get(o, 0) for o in set(opnd_list))
+
+    # fusion-internal layout ops are virtual (folded into the generated
+    # access pattern); "copy" is only free INSIDE a fusion
+    LAYOUT_OPS = ("reverse", "bitcast", "transpose", "reshape", "broadcast",
+                  "copy")
+    # parse body: instruction records
+    insts = []                 # (name, op, operands, result_bytes, is_root)
+    by_name = {}
+    for line in body:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        nm, brhs = m.group(1), m.group(2)
+        opm = re.search(r"\b([a-z][\w\-]*)\(", brhs)
+        op = opm.group(1) if opm else ""
+        args = brhs[brhs.find("(") + 1:] if "(" in brhs else ""
+        used = _OPND_RE.findall(args.split(")")[0]) if args else []
+        rb = _shape_bytes(brhs.split(" ", 1)[0])
+        rec = (nm, op, used, rb, line.strip().startswith("ROOT"), brhs)
+        insts.append(rec)
+        by_name[nm] = rec
+
+    users: Dict[str, list] = {}
+    for rec in insts:
+        for o in rec[2]:
+            users.setdefault(o, []).append(rec)
+
+    def sparse_bytes(pname) -> Optional[int]:
+        """If pname is consumed only through layout ops ending in
+        dynamic-slice/gather (as the sliced operand), return slice bytes."""
+        total = 0
+        frontier = [pname]
+        seen = set()
+        while frontier:
+            cur = frontier.pop()
+            if cur in seen:
+                continue
+            seen.add(cur)
+            for nm, op, used, rb, _, _ in users.get(cur, []):
+                if (op in ("dynamic-slice", "gather", "slice")
+                        and used and used[0] == cur):
+                    total += rb
+                elif op == "dynamic-update-slice" and used and used[0] == cur:
+                    # in-place update target: aliased, zero read traffic
+                    # (the update's write is charged via root_dus)
+                    frontier.append(nm)
+                elif op in LAYOUT_OPS:
+                    frontier.append(nm)
+                else:
+                    return None
+        return total
+
+    total = float(res_bytes)
+    root_dus = 0
+    for nm, op, used, rb, is_root, brhs in insts:
+        if is_root and op == "dynamic-update-slice" and len(used) > 1:
+            urec = by_name.get(used[1])
+            root_dus = urec[3] if urec else 0
+    for nm, op, used, rb, is_root, brhs in insts:
+        if op != "parameter":
+            continue
+        pi = re.search(r"parameter\((\d+)\)", brhs)
+        if not pi:
+            continue
+        idx = int(pi.group(1))
+        if idx >= len(opnd_list):
+            continue
+        full = name_bytes.get(opnd_list[idx], 0)
+        sb = sparse_bytes(nm)
+        if sb is not None:
+            total += min(full, 2 * sb)   # sparse/aliased access (0 allowed)
+        else:
+            total += full
+    if root_dus:
+        total += root_dus - res_bytes     # in-place root update
+        total = max(total, 0.0)
+    return total
+
+
+def name_type_of(body_lines, name: str) -> str:
+    if name is None:
+        return ""
+    for line in body_lines:
+        m = _DEF_RE.match(line)
+        if m and m.group(1) == name:
+            return m.group(2).split(" ", 1)[0]
+    return ""
+
+
+@dataclasses.dataclass
+class CompCost:
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    children: List[Tuple[str, str, float]] = dataclasses.field(
+        default_factory=list)  # (kind, comp_name, weight)
+
+
+def parse_hlo(text: str, branch_weight: float = 1.0) -> Dict:
+    """Returns loop-aware totals: {'flops','hbm_bytes','coll_bytes':{}}."""
+    # ---- split into computations -----------------------------------------
+    # Header lines look like:  [ENTRY] %name (params...) -> result { ... }
+    # (params may be nested tuple types, so match token-wise, not by regex
+    # over the paren group).
+    comps: Dict[str, List[str]] = {}
+    entry = None
+    cur = None
+    for line in text.splitlines():
+        s = line.strip()
+        if s.endswith("{") and "->" in s and "=" not in s.split("(")[0]:
+            toks = s.split()
+            name = toks[1] if toks[0] == "ENTRY" else toks[0]
+            cur = name.lstrip("%")
+            comps[cur] = []
+            if toks[0] == "ENTRY":
+                entry = cur
+            continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+
+    # ---- instruction shapes (module-wide name -> result bytes) ------------
+    name_bytes: Dict[str, int] = {}
+    name_type: Dict[str, str] = {}
+    for lines in comps.values():
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            name, rhs = m.group(1), m.group(2)
+            tpart = rhs.split(" ", 1)[0]
+            # tuple results: "(f32[...], ...)"; strip to inner
+            name_bytes[name] = _shape_bytes(rhs[: rhs.find(")") + 1]
+                                            if rhs.startswith("(") else tpart)
+            name_type[name] = rhs
+
+    # ---- trip counts: condition computation -> max int constant ----------
+    def trip_of(cond_name: str) -> int:
+        best = 1
+        for line in comps.get(cond_name, []):
+            for m in re.finditer(r"constant\((\d+)\)", line):
+                best = max(best, int(m.group(1)))
+        return best
+
+    # ---- per-computation local costs + call edges -------------------------
+    costs: Dict[str, CompCost] = {}
+    for cname, lines in comps.items():
+        c = CompCost()
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            name, rhs = m.group(1), m.group(2)
+            opcode_m = re.search(r"\b([a-z][\w\-]*)\(", rhs)
+            opcode = opcode_m.group(1) if opcode_m else ""
+            if opcode == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", rhs)
+                cm = re.search(r"condition=%?([\w.\-]+)", rhs)
+                if bm and cm:
+                    c.children.append(("while", bm.group(1),
+                                       float(trip_of(cm.group(1)))))
+                continue
+            if opcode == "conditional":
+                for br in re.finditer(
+                    r"(?:true_computation|false_computation|"
+                    r"branch_computations=\{[^}]*)=?%?([\w.\-]+)", rhs
+                ):
+                    c.children.append(("cond", br.group(1), branch_weight))
+                # also handle branch_computations={%a, %b}
+                bc = re.search(r"branch_computations=\{([^}]*)\}", rhs)
+                if bc:
+                    for nm in _OPND_RE.findall(bc.group(1)):
+                        c.children.append(("cond", nm, branch_weight))
+                continue
+            if opcode == "call":
+                tm = re.search(r"to_apply=%?([\w.\-]+)", rhs)
+                if tm:
+                    c.children.append(("call", tm.group(1), 1.0))
+                continue
+            if opcode in FREE_OPS or not opcode:
+                continue
+            res_bytes = name_bytes.get(name, 0)
+            # collectives: wire bytes, not HBM
+            coll = None
+            for k in WIRE_FACTOR:
+                if opcode == k or opcode.startswith(k):
+                    coll = k
+                    break
+            if coll:
+                c.coll_bytes[coll] = (
+                    c.coll_bytes.get(coll, 0.0)
+                    + res_bytes * WIRE_FACTOR[coll]
+                )
+                continue
+            # operand bytes (dedup per instruction)
+            args = rhs[rhs.find("(") + 1 : ]
+            # strip attributes after the closing paren of operand list
+            depth, end = 0, len(args)
+            for i, ch in enumerate(args):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    if depth == 0:
+                        end = i
+                        break
+                    depth -= 1
+            opnd_list = _OPND_RE.findall(args[:end])
+            opnds = set(opnd_list)
+            if opcode in INPLACE_OPS:
+                # in-place update: traffic = the update operand (+ indices),
+                # not the buffer threaded through (XLA aliases it)
+                upd = opnd_list[1] if len(opnd_list) > 1 else None
+                c.hbm_bytes += 2 * name_bytes.get(upd, 0)
+                continue
+            if opcode in SPARSE_READ_OPS:
+                # sparse read: traffic = gathered result (+ indices), not
+                # the whole table
+                c.hbm_bytes += 2 * res_bytes
+                continue
+            if opcode == "fusion":
+                # fusion boundary = HBM traffic, but params consumed ONLY
+                # through dynamic-slice/gather inside the fusion are sparse
+                # reads (count the sliced bytes, not the whole buffer), and
+                # a dynamic-update-slice root aliases in place.
+                c.hbm_bytes += _fusion_bytes(
+                    rhs, opnd_list, res_bytes, name_bytes, comps
+                )
+                continue
+            op_bytes = sum(name_bytes.get(o, 0) for o in opnds)
+            c.hbm_bytes += res_bytes + op_bytes
+            if opcode == "dot":
+                cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+                lhs = next(iter(_OPND_RE.findall(args[:end])), None)
+                contracted = 1
+                if cd and lhs and lhs in name_type:
+                    lhs_shape = _SHAPE_RE.search(name_type[lhs])
+                    if lhs_shape:
+                        dims = [int(d) for d in lhs_shape.group(2).split(",")
+                                if d]
+                        for di in cd.group(1).split(","):
+                            if di and int(di) < len(dims):
+                                contracted *= dims[int(di)]
+                res_elems = 0
+                rm = _SHAPE_RE.search(rhs.split(" ", 1)[0])
+                if rm:
+                    res_elems = 1
+                    for d in rm.group(2).split(","):
+                        if d:
+                            res_elems *= int(d)
+                c.dot_flops += 2.0 * res_elems * contracted
+        costs[cname] = c
+
+    # ---- effective multipliers from ENTRY ---------------------------------
+    mult: Dict[str, float] = {entry: 1.0}
+    order = [entry]
+    seen = {entry}
+    while order:
+        nxt = []
+        for cn in order:
+            for kind, child, w in costs.get(cn, CompCost()).children:
+                if child not in comps:
+                    continue
+                mult[child] = mult.get(child, 0.0) + mult.get(cn, 0.0) * w
+                if child not in seen:
+                    seen.add(child)
+                    nxt.append(child)
+        order = nxt
+
+    flops = sum(costs[c].dot_flops * m for c, m in mult.items() if c in costs)
+    hbm = sum(costs[c].hbm_bytes * m for c, m in mult.items() if c in costs)
+    coll: Dict[str, float] = {}
+    for cn, m in mult.items():
+        for k, v in costs.get(cn, CompCost()).coll_bytes.items():
+            coll[k] = coll.get(k, 0.0) + v * m
+    return {"flops": flops, "hbm_bytes": hbm, "coll_bytes": coll,
+            "computations": len(comps)}
+
+
+# ---------------------------------------------------------------------------
+# analytic MODEL_FLOPS (the "useful compute" yardstick)
+# ---------------------------------------------------------------------------
+
+def model_params(cfg) -> Tuple[float, float]:
+    """(total params, active params) from exact eval_shape sizes."""
+    import jax
+    from repro.models.registry import param_shapes
+
+    tree = param_shapes(cfg)
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    total = active = 0.0
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        n = 1.0
+        for d in leaf.shape:
+            n *= d
+        if "embed" in name:
+            continue                      # 6ND convention: non-embedding
+        total += n
+        if cfg.moe and re.search(r"moe/(w1|w2|w3)$", name):
+            active += n * cfg.moe.top_k / cfg.moe.n_experts
+        else:
+            active += n
+    return total, active
+
+
+def model_flops(cfg, shape) -> float:
+    """Global MODEL_FLOPS per step: 6ND train / 2ND prefill / 2N decode,
+    plus causal attention terms."""
+    N, N_act = model_params(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    hd = cfg.resolved_head_dim
+    attn_layers = (
+        0 if (cfg.xlstm is not None) else
+        (cfg.n_layers // cfg.hybrid_attn_every if cfg.hybrid_attn_every
+         else cfg.n_layers)
+    )
+    if shape.kind == "train":
+        flops = 6.0 * N_act * B * S
+        flops += 6.0 * attn_layers * B * S * S * cfg.n_heads * hd  # causal/2*12
+        if cfg.window and not cfg.encoder_only:
+            # local layers attend to <= window keys
+            local = attn_layers - (attn_layers // cfg.global_every
+                                   if cfg.global_every else 0)
+            flops -= 6.0 * local * B * S * max(0, S - cfg.window) \
+                * cfg.n_heads * hd
+        return flops
+    if shape.kind == "prefill":
+        flops = 2.0 * N_act * B * S
+        flops += 2.0 * attn_layers * B * S * S * cfg.n_heads * hd / 2
+        return flops
+    # decode: one token/seq; attention reads the S-long cache
+    flops = 2.0 * N_act * B
+    flops += 4.0 * attn_layers * B * S * cfg.n_heads * hd
+    return flops
+
+
+# ---------------------------------------------------------------------------
+# cell -> roofline record
+# ---------------------------------------------------------------------------
+
+def analyze_cell(json_path: Path, branch_weight: Optional[float] = None
+                 ) -> Optional[Dict]:
+    from repro.config import SHAPES, get_arch
+
+    rec = json.loads(json_path.read_text())
+    if rec.get("status") != "OK":
+        return rec
+    cfg = get_arch(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    if branch_weight is None:
+        branch_weight = (1.0 / cfg.hybrid_attn_every
+                         if cfg.hybrid_attn_every else 1.0)
+    hlo_path = json_path.parent / (json_path.stem + ".hlo.gz")
+    if not hlo_path.exists():
+        return {**rec, "status": "NO_HLO"}
+    with gzip.open(hlo_path, "rt") as f:
+        parsed = parse_hlo(f.read(), branch_weight=branch_weight)
+
+    chips = rec["n_chips"]
+    t_compute = parsed["flops"] / PEAK_FLOPS            # per-chip program
+    t_memory = parsed["hbm_bytes"] / HBM_BW
+    wire = sum(parsed["coll_bytes"].values())
+    t_coll = wire / (ICI_LINKS * ICI_BW)
+    mf = model_flops(cfg, shape)
+    dom = max(
+        (("compute", t_compute), ("memory", t_memory),
+         ("collective", t_coll)),
+        key=lambda kv: kv[1],
+    )[0]
+    step_time = max(t_compute, t_memory, t_coll)
+    mfu = (mf / chips / PEAK_FLOPS) / step_time if step_time else 0.0
+    return {
+        **{k: rec[k] for k in ("arch", "shape", "mesh", "n_chips")},
+        "status": "OK",
+        "hlo_flops_per_chip": parsed["flops"],
+        "hbm_bytes_per_chip": parsed["hbm_bytes"],
+        "coll_bytes_per_chip": wire,
+        "coll_by_type": parsed["coll_bytes"],
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "bottleneck": dom,
+        "model_flops_global": mf,
+        "useful_ratio": mf / chips / max(parsed["flops"], 1.0),
+        "roofline_fraction_mfu": mfu,
+        "temp_bytes": rec.get("memory_analysis", {}).get(
+            "temp_size_in_bytes"),
+    }
+
+
+def analyze_all(results_dir: Path, mesh: str = "single") -> List[Dict]:
+    out = []
+    for p in sorted(results_dir.glob(f"*__{mesh}.json")):
+        r = analyze_cell(p)
+        if r is not None:
+            out.append(r)
+    return out
+
+
+def table(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "bottleneck | MODEL/HLO | roofline frac |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        if r.get("status") != "OK":
+            lines.append(
+                f"| {r.get('arch','?')} | {r.get('shape','?')} | "
+                f"{r.get('mesh','?')} | - | - | - | "
+                f"{r.get('status')}: {r.get('reason','')} | - | - |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
+            f"| {r['t_collective_s']:.3e} | {r['bottleneck']} "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction_mfu']:.2%} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    rows = analyze_all(Path(args.dir), args.mesh)
+    if args.json:
+        print(json.dumps(rows, indent=2))
+    else:
+        print(table(rows))

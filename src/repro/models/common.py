@@ -1,0 +1,304 @@
+"""Shared model blocks: norms, RoPE, attention, MLPs, embeddings, losses.
+
+Pure functions over param dicts (pytrees).  Initializers take an explicit
+PRNG key; every block also works under ``jax.eval_shape`` for the dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.distributed.ctx import shard_act
+
+NEG_INF = -1e30
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ArchConfig, d: int):
+    if cfg.norm == "layernorm_np":      # olmo: non-parametric LayerNorm
+        return {}
+    return {"scale": jnp.ones((d,), dtype_of(cfg.param_dtype))}
+
+
+def apply_norm(cfg: ArchConfig, p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm_np":
+        mu = xf.mean(-1, keepdims=True)
+        var = xf.var(-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    else:
+        out = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+        out = out * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rms_headnorm(scale, x, eps: float = 1e-6):
+    """qwen3-style per-head qk-norm: x [..., hd], scale [hd]."""
+    xf = x.astype(jnp.float32)
+    out = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x [..., S, hd] (hd even), positions broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (XLA path with dynamic window; Pallas path via repro.kernels)
+# ---------------------------------------------------------------------------
+
+def init_attention(cfg: ArchConfig, key) -> Dict:
+    d, H, KVH, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    pdt = dtype_of(cfg.param_dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 0.02
+    p = {
+        "wq": jax.random.normal(k1, (d, H, hd), pdt) * s,
+        "wk": jax.random.normal(k2, (d, KVH, hd), pdt) * s,
+        "wv": jax.random.normal(k3, (d, KVH, hd), pdt) * s,
+        "wo": jax.random.normal(k4, (H, hd, d), pdt) * s / max(1, cfg.n_layers) ** 0.5,
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), pdt)
+        p["k_norm"] = jnp.ones((hd,), pdt)
+    return p
+
+
+def _mask_logits(s, qpos, kpos, window, causal: bool):
+    """s [..., Sq, Sk]; window is a traced scalar (0 = full)."""
+    mask = jnp.ones(s.shape[-2:], bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    win_ok = (window <= 0) | ((qpos[:, None] - kpos[None, :]) < window)
+    mask &= win_ok
+    return jnp.where(mask, s, NEG_INF)
+
+
+# chunk queries when the full [*, S, S] score tensor would exceed VMEM-scale
+# temp budgets (exact: each q row sees the full key set) — the XLA analogue
+# of the Pallas flash kernel, required for the prefill_32k cells to fit HBM
+_QCHUNK_THRESHOLD = 8192
+_QCHUNK = 1024
+
+
+def _sdpa(q, k, v, window, causal: bool, hd: int):
+    """q [B,H,S,hd], k/v [B,KVH,S,hd] (GQA) -> [B,H,S,hd]."""
+    B, H, S, _ = q.shape
+    KVH = k.shape[1]
+    group = H // KVH
+    qg = q.reshape(B, KVH, group, S, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def block(q_blk, q0):
+        s = jnp.einsum("bkgqd,bksd->bkgqs", q_blk, kf) / (hd ** 0.5)
+        qpos = q0 + jnp.arange(q_blk.shape[3])
+        kpos = jnp.arange(S)
+        mask = jnp.ones((q_blk.shape[3], S), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        mask &= (window <= 0) | ((qpos[:, None] - kpos[None, :]) < window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bkgqs,bksd->bkgqd", pr, vf)
+
+    if S <= _QCHUNK_THRESHOLD or S % _QCHUNK != 0:
+        o = block(qg, 0)
+    else:
+        nc = S // _QCHUNK
+        qc = qg.reshape(B, KVH, group, nc, _QCHUNK, hd).transpose(
+            3, 0, 1, 2, 4, 5)
+
+        def body(c, q_blk):
+            return c + 1, block(q_blk, c * _QCHUNK)
+
+        _, oc = jax.lax.scan(body, jnp.int32(0), qc)
+        o = oc.transpose(1, 2, 3, 0, 4, 5).reshape(B, KVH, group, S, hd)
+    return o.reshape(B, H, S, hd)
+
+
+def attention_fwd(
+    cfg: ArchConfig,
+    p: Dict,
+    x: jax.Array,                 # [B, S, D]
+    positions: jax.Array,         # [S] or [B, S]
+    *,
+    window,                       # scalar (traced ok); 0 = full
+    causal: bool = True,
+    return_kv: bool = False,
+):
+    cdt = dtype_of(cfg.compute_dtype)
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    xc = x.astype(cdt)
+    q = jnp.einsum("bsd,dhk->bhsk", xc, p["wq"].astype(cdt))
+    k = jnp.einsum("bsd,dhk->bhsk", xc, p["wk"].astype(cdt))
+    v = jnp.einsum("bsd,dhk->bhsk", xc, p["wv"].astype(cdt))
+    if cfg.qk_norm:
+        q = rms_headnorm(p["q_norm"], q)
+        k = rms_headnorm(p["k_norm"], k)
+    if positions.ndim == 1:
+        pos_b = positions[None, None, :]
+    else:
+        pos_b = positions[:, None, :]
+    q = rope(q, pos_b, cfg.rope_theta)
+    k = rope(k, pos_b, cfg.rope_theta)
+
+    S = x.shape[1]
+    o = _sdpa(q, k, v, window, causal, hd).astype(cdt)
+    out = jnp.einsum("bhqk,hkd->bqd", o, p["wo"].astype(cdt))
+    out = out.astype(x.dtype)
+    if return_kv:
+        # [B, KVH, S, hd] (post-RoPE, pre-GQA-repeat) — KV-cache layout
+        return out, k, v
+    return out
+
+
+def attention_decode(
+    cfg: ArchConfig,
+    p: Dict,
+    x: jax.Array,                 # [B, 1, D] current token hidden
+    cache_k: jax.Array,           # [B, KVH, Smax, hd]
+    cache_v: jax.Array,
+    lengths: jax.Array,           # [B] valid cache length (before this token)
+    *,
+    window,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    cdt = dtype_of(cfg.compute_dtype)
+    B = x.shape[0]
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    xc = x.astype(cdt)
+    q = jnp.einsum("bsd,dhk->bhsk", xc, p["wq"].astype(cdt))[:, :, 0]   # [B,H,hd]
+    k = jnp.einsum("bsd,dhk->bhsk", xc, p["wk"].astype(cdt))[:, :, 0]
+    v = jnp.einsum("bsd,dhk->bhsk", xc, p["wv"].astype(cdt))[:, :, 0]
+    if cfg.qk_norm:
+        q = rms_headnorm(p["q_norm"], q)
+        k = rms_headnorm(p["k_norm"], k)
+    pos = lengths.astype(jnp.float32)
+    q = rope(q, pos[:, None], cfg.rope_theta)
+    k = rope(k, pos[:, None], cfg.rope_theta)
+
+    # append (k, v) at position lengths[b]
+    bidx = jnp.arange(B)
+    cache_k = cache_k.at[bidx, :, lengths, :].set(k.astype(cache_k.dtype))
+    cache_v = cache_v.at[bidx, :, lengths, :].set(v.astype(cache_v.dtype))
+    cache_k = shard_act(cache_k, "kv4")
+    cache_v = shard_act(cache_v, "kv4")
+
+    Smax = cache_k.shape[2]
+    group = H // KVH
+    # grouped-query attention against the resident cache: no KV repeat, no
+    # f32 cache copy — bf16 reads with f32 MXU accumulation
+    # (EXPERIMENTS.md §Perf iteration 2)
+    qg = q.reshape(B, KVH, group, hd).astype(cache_k.dtype)
+    s = jnp.einsum("bkgd,bksd->bkgs", qg, cache_k,
+                   preferred_element_type=jnp.float32) / (hd ** 0.5)
+    kpos = jnp.arange(Smax)[None, None, None, :]
+    ok = kpos <= lengths[:, None, None, None]
+    ok &= (window <= 0) | (kpos > lengths[:, None, None, None] - window)
+    s = jnp.where(ok, s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", pr.astype(cache_v.dtype), cache_v,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, H, hd).astype(cdt)
+    out = jnp.einsum("bhk,hkd->bd", o, p["wo"].astype(cdt))[:, None, :]
+    return out.astype(x.dtype), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU) and embeddings
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ArchConfig, key, d_ff: Optional[int] = None) -> Dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    pdt = dtype_of(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = 0.02
+    return {
+        "w1": jax.random.normal(k1, (d, f), pdt) * s,
+        "w3": jax.random.normal(k2, (d, f), pdt) * s,
+        "w2": jax.random.normal(k3, (f, d), pdt) * s / max(1, cfg.n_layers) ** 0.5,
+    }
+
+
+def mlp_fwd(cfg: ArchConfig, p: Dict, x: jax.Array) -> jax.Array:
+    cdt = dtype_of(cfg.compute_dtype)
+    xc = x.astype(cdt)
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    h = act(xc @ p["w1"].astype(cdt)) * (xc @ p["w3"].astype(cdt))
+    return (h @ p["w2"].astype(cdt)).astype(x.dtype)
+
+
+def init_embed(cfg: ArchConfig, key) -> Dict:
+    pdt = dtype_of(cfg.param_dtype)
+    p = {"embed": jax.random.normal(key, (cfg.vocab, cfg.d_model), pdt) * 0.02}
+    if not cfg.tie_embeddings:
+        p["unembed"] = (
+            jax.random.normal(
+                jax.random.fold_in(key, 1), (cfg.d_model, cfg.vocab), pdt
+            ) * 0.02
+        )
+    return p
+
+
+def embed_tokens(cfg: ArchConfig, p: Dict, tokens: jax.Array) -> jax.Array:
+    x = p["embed"][tokens].astype(dtype_of(cfg.compute_dtype))
+    if cfg.family == "dense" and cfg.name.startswith("gemma"):
+        x = x * (cfg.d_model ** 0.5)  # gemma embedding scaling
+    return x
+
+
+def unembed(cfg: ArchConfig, p: Dict, x: jax.Array) -> jax.Array:
+    cdt = dtype_of(cfg.compute_dtype)
+    if cfg.tie_embeddings:
+        w = p["embed"].astype(cdt).T
+    else:
+        w = p["unembed"].astype(cdt)
+    logits = x.astype(cdt) @ w
+    return shard_act(logits, "logits")
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, mask: jax.Array,
+                  z_coef: float = 1e-4):
+    """Token CE with z-loss; logits [B,S,V] (any dtype), labels [B,S]."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    z = z_coef * (lse ** 2)
+    m = mask.astype(jnp.float32)
+    denom = jnp.maximum(m.sum(), 1.0)
+    loss = ((nll + z) * m).sum() / denom
+    acc = (((lf.argmax(-1) == labels) & mask).sum() / denom)
+    return loss, {"nll": (nll * m).sum() / denom, "acc": acc}

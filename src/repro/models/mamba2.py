@@ -1,0 +1,216 @@
+"""Mamba2 (SSD) block — chunked-parallel training form + recurrent decode.
+
+State-space recurrence per head (scalar-decay SSD, as in Mamba2):
+
+    h_t = a_t * h_{t-1} + u_t ⊗ B_t          h: [P, N]
+    y_t = (h_t @ C_t) + D * x_t
+
+with a_t = exp(A·dt_t) in (0,1], u_t = dt_t * x_t.  Training uses the
+chunked decomposition (chunk Q): intra-chunk is an attention-like
+[Q, Q] masked matmul (MXU work), inter-chunk carries the [P, N] state
+through a short lax.scan over S/Q chunks — O(S·Q) FLOPs, O(S/Q)
+sequential depth, and bounded activation memory (the roofline-relevant
+property for long_500k).  Decode is the plain one-step recurrence.
+
+``ssd_chunked`` is shared with the mLSTM block (repro.models.xlstm), whose
+matrix-memory update has the same algebra (DESIGN.md Sec 6).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ArchConfig
+from repro.models import common
+
+
+def ssd_chunked(u, a, Bm, Cm, chunk: int):
+    """u [B,S,H,P]; a [B,S,H] decay; Bm/Cm [B,S,H,N] -> y [B,S,H,P], h_last.
+
+    Exact evaluation of the recurrence above (initial state 0).
+    """
+    B, S, H, P = u.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, f"seq {S} % chunk {Q} != 0"
+    nc = S // Q
+
+    def r(x):
+        return x.reshape(B, nc, Q, *x.shape[2:])
+
+    u_, a_, B_, C_ = r(u), r(a), r(Bm), r(Cm)
+    la = jnp.log(jnp.maximum(a_, 1e-20)).astype(jnp.float32)   # [B,nc,Q,H]
+    cum = jnp.cumsum(la, axis=2)                                # inclusive
+
+    # mixed precision: the big [B,S,...] operands stream in bf16; only the
+    # small per-chunk decay/state tensors stay f32 (accumulation via
+    # preferred_element_type) — EXPERIMENTS.md §Perf iteration 4.
+    bf = jnp.bfloat16
+    # intra-chunk: score[i,j] = (C_i . B_j) * exp(cum_i - cum_j) , j <= i
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", C_.astype(bf), B_.astype(bf),
+                        preferred_element_type=jnp.float32)
+    cumh = cum.transpose(0, 1, 3, 2)                            # [B,nc,H,Q]
+    decay = jnp.exp(cumh[..., :, None] - cumh[..., None, :])
+    # decay[b,c,h,q,k] = exp(cum_q - cum_k)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    w = jnp.where(mask[None, None, None], scores * decay, 0.0)
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", w.astype(bf), u_.astype(bf),
+                         preferred_element_type=jnp.float32)
+
+    # inter-chunk: scan over chunk boundary states
+    # state contribution of chunk c: sum_j exp(cum_last - cum_j) u_j ⊗ B_j
+    tail = jnp.exp(cum[:, :, -1:, :] - cum)                     # [B,nc,Q,H]
+    chunk_state = jnp.einsum(
+        "bcqh,bcqhp,bcqhn->bchpn", tail.astype(bf), u_.astype(bf),
+        B_.astype(bf), preferred_element_type=jnp.float32,
+    )                                                            # [B,nc,H,P,N]
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                     # [B,nc,H]
+
+    def step(h, xs):
+        st, dc = xs                                              # [B,H,P,N], [B,H]
+        h_out = h                                                # state entering chunk
+        h = h * dc[:, :, None, None] + st
+        return h, h_out
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    h_last, h_in = lax.scan(
+        step, h0,
+        (chunk_state.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    h_in = h_in.transpose(1, 0, 2, 3, 4)                         # [B,nc,H,P,N]
+    y_inter = jnp.einsum(
+        "bcqhn,bchpn->bcqhp", C_.astype(jnp.bfloat16),
+        h_in.astype(jnp.bfloat16), preferred_element_type=jnp.float32,
+    ) * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    return y, h_last
+
+
+def ssd_recurrent_step(h, u_t, a_t, B_t, C_t):
+    """One decode step. h [B,H,P,N]; u_t [B,H,P]; a_t [B,H]; B_t/C_t [B,H,N]."""
+    h = h * a_t[:, :, None, None] + jnp.einsum("bhp,bhn->bhpn", u_t, B_t)
+    y = jnp.einsum("bhpn,bhn->bhp", h, C_t)
+    return h, y
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def init_block(cfg: ArchConfig, key) -> Dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner = s.expand * d
+    H = d_inner // s.head_dim
+    convdim = d_inner + 2 * s.d_state
+    pdt = common.dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": common.init_norm(cfg, d),
+        "in_proj": jax.random.normal(
+            ks[0], (d, 2 * d_inner + 2 * s.d_state + H), pdt) * 0.02,
+        "conv_w": jax.random.normal(ks[1], (s.d_conv, convdim), pdt) * 0.2,
+        "conv_b": jnp.zeros((convdim,), pdt),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "out_norm": common.init_norm(cfg, d_inner),
+        "out_proj": jax.random.normal(ks[2], (d_inner, d), pdt)
+        * 0.02 / max(1, cfg.n_layers) ** 0.5,
+    }
+
+
+def _split_proj(cfg: ArchConfig, proj):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner : 2 * d_inner + 2 * s.d_state]
+    dt = proj[..., 2 * d_inner + 2 * s.d_state :]
+    return z, xbc, dt, d_inner, H
+
+
+def block_fwd(cfg: ArchConfig, p: Dict, x: jax.Array) -> jax.Array:
+    """x [B, S, D] -> [B, S, D] (training/prefill, chunked)."""
+    s = cfg.ssm
+    cdt = common.dtype_of(cfg.compute_dtype)
+    Bsz, S, D = x.shape
+    h = common.apply_norm(cfg, p["ln"], x).astype(cdt)
+    proj = h @ p["in_proj"].astype(cdt)
+    z, xbc, dt, d_inner, H = _split_proj(cfg, proj)
+
+    # causal depthwise conv over seq
+    K = s.d_conv
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    conv = sum(
+        pad[:, i : i + S, :] * p["conv_w"].astype(cdt)[i][None, None, :]
+        for i in range(K)
+    ) + p["conv_b"].astype(cdt)
+    conv = jax.nn.silu(conv)
+    xs = conv[..., :d_inner].reshape(Bsz, S, H, s.head_dim)
+    Bm = conv[..., d_inner : d_inner + s.d_state]
+    Cm = conv[..., d_inner + s.d_state :]
+    Bm = jnp.broadcast_to(Bm[:, :, None, :], (Bsz, S, H, s.d_state))
+    Cm = jnp.broadcast_to(Cm[:, :, None, :], (Bsz, S, H, s.d_state))
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])     # [B,S,H]
+    A = -jnp.exp(p["A_log"])                                         # [H]
+    a = jnp.exp(A[None, None, :] * dt)
+    u = xs.astype(jnp.float32) * dt[..., None]
+
+    y, _ = ssd_chunked(u, a, Bm, Cm, s.chunk)
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(Bsz, S, d_inner).astype(cdt)
+    y = y * jax.nn.silu(z)
+    y = common.apply_norm(cfg, p["out_norm"], y)
+    out = y @ p["out_proj"].astype(cdt)
+    return x + out.astype(x.dtype)
+
+
+def init_state(cfg: ArchConfig, B: int):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    convdim = d_inner + 2 * s.d_state
+    return {
+        "h": jnp.zeros((B, H, s.head_dim, s.d_state), jnp.float32),
+        "conv": jnp.zeros((B, s.d_conv - 1, convdim), jnp.float32),
+    }
+
+
+def block_decode(cfg: ArchConfig, p: Dict, x: jax.Array, state: Dict):
+    """x [B, 1, D] one token; returns (y [B,1,D], state')."""
+    s = cfg.ssm
+    cdt = common.dtype_of(cfg.compute_dtype)
+    Bsz = x.shape[0]
+    h = common.apply_norm(cfg, p["ln"], x).astype(cdt)
+    proj = (h @ p["in_proj"].astype(cdt))[:, 0]
+    z, xbc, dt, d_inner, H = _split_proj(cfg, proj)
+
+    hist = jnp.concatenate(
+        [state["conv"], xbc[:, None, :].astype(jnp.float32)], axis=1
+    )                                                            # [B, K, convdim]
+    conv = jnp.einsum("bkc,kc->bc", hist, p["conv_w"].astype(jnp.float32))
+    conv = jax.nn.silu(conv + p["conv_b"].astype(jnp.float32))
+    new_conv = hist[:, 1:, :]
+
+    xs = conv[:, :d_inner].reshape(Bsz, H, s.head_dim)
+    Bm = jnp.broadcast_to(
+        conv[:, None, d_inner : d_inner + s.d_state], (Bsz, H, s.d_state))
+    Cm = jnp.broadcast_to(
+        conv[:, None, d_inner + s.d_state :], (Bsz, H, s.d_state))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(A[None, :] * dt)
+    u = xs.astype(jnp.float32) * dt[..., None]
+    hstate, y = ssd_recurrent_step(state["h"], u, a, Bm, Cm)
+    y = y + xs.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(Bsz, d_inner).astype(cdt)
+    y = y * jax.nn.silu(z)
+    y = common.apply_norm(cfg, p["out_norm"], y)
+    out = (y @ p["out_proj"].astype(cdt))[:, None, :]
+    return x + out.astype(x.dtype), {"h": hstate, "conv": new_conv}

@@ -1,0 +1,135 @@
+"""Mixture-of-Experts FFN with sort-based (TPU-friendly) dispatch.
+
+Top-k routing with static per-expert capacity.  Dispatch is the sort-based
+formulation: flatten (token, choice) assignments, sort by expert id, take
+the first C per expert (capacity drop), gather token activations into a
+dense [E, C, D] block, run all experts as one batched einsum on the MXU,
+and scatter-add weighted outputs back.  Compared to the one-hot GShard
+dispatch this avoids the [T, E, C] tensor entirely — O(T·k) sort + gathers.
+
+Experts shard over the ``model`` axis (EP); the [E, C, D] blocks carry an
+explicit sharding constraint so the all-to-all happens on the compact
+dispatched form, not on the full activations.
+
+Aux losses: switch-style load balance + router z-loss.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig, MoEConfig
+from repro.distributed.ctx import shard_act
+from repro.models import common
+
+
+def init_moe(cfg: ArchConfig, key) -> Dict:
+    m = cfg.moe
+    d = cfg.d_model
+    pdt = common.dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    s = 0.02
+    p = {
+        "router": jax.random.normal(ks[0], (d, m.n_experts), jnp.float32) * s,
+        "w1": jax.random.normal(ks[1], (m.n_experts, d, m.d_expert), pdt) * s,
+        "w3": jax.random.normal(ks[2], (m.n_experts, d, m.d_expert), pdt) * s,
+        "w2": jax.random.normal(ks[3], (m.n_experts, m.d_expert, d), pdt)
+        * s / max(1, cfg.n_layers) ** 0.5,
+    }
+    if m.n_shared:
+        p["shared"] = common.init_mlp(
+            cfg, ks[4], d_ff=m.d_expert * m.n_shared
+        )
+    return p
+
+
+def moe_fwd(cfg: ArchConfig, p: Dict, x: jax.Array) -> Tuple[jax.Array, Dict]:
+    """x [B, S, D] -> (out [B, S, D], aux-loss dict)."""
+    m: MoEConfig = cfg.moe
+    cdt = common.dtype_of(cfg.compute_dtype)
+    B, S, D = x.shape
+    T = B * S
+    E, K = m.n_experts, m.top_k
+    # tokens leave sequence-parallel layout before dispatch: one explicit
+    # all-gather here, instead of XLA resolving the dispatch gather against
+    # an SP-sharded table with full [E,C,D] f32 all-reduces
+    # (EXPERIMENTS.md §Perf iteration 7)
+    xt = shard_act(x.reshape(T, D), "moe_tokens")
+
+    logits = (xt.astype(jnp.float32) @ p["router"])            # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, choice = jax.lax.top_k(probs, K)                      # [T, K]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # ---- sort-based dispatch -------------------------------------------
+    C = max(1, int(T * K / E * m.capacity_factor))
+    flat_e = choice.reshape(-1).astype(jnp.int32)               # [T*K]
+    flat_t = (
+        jnp.arange(T * K, dtype=jnp.int32) // K                 # token of each slot
+    )
+    flat_g = gate.reshape(-1)
+    # sort ints only (expert id, slot id); gather float gates through the
+    # permutation so gradients flow via gather, not sort-vjp
+    perm0 = jnp.arange(T * K, dtype=jnp.int32)
+    se, sperm = jax.lax.sort((flat_e, perm0), num_keys=2)
+    st = flat_t[sperm]
+    sg = flat_g[sperm]
+    # position within expert segment
+    idx = jnp.arange(T * K, dtype=jnp.int32)
+    seg_start = jnp.where(
+        jnp.concatenate([jnp.ones((1,), bool), se[1:] != se[:-1]]), idx, -1
+    )
+    seg_start = jax.lax.associative_scan(jnp.maximum, seg_start)
+    pos_in_e = idx - seg_start
+    keep = pos_in_e < C
+    slot = jnp.where(keep, se * C + pos_in_e, E * C)            # E*C = dropped
+
+    # gather tokens into [E, C, D]
+    tok_at_slot = jnp.full((E * C + 1,), T, jnp.int32).at[slot].set(
+        st, mode="drop"
+    )[: E * C]
+    gate_at_slot = jnp.zeros((E * C + 1,), jnp.float32).at[slot].set(
+        sg, mode="drop"
+    )[: E * C]
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, D), xt.dtype)], 0)
+    xe = xt_pad[tok_at_slot].reshape(E, C, D).astype(cdt)
+    xe = shard_act(xe, "moe_experts")        # EP: experts over model axis
+
+    # ---- expert compute (single batched einsum; EP over model axis) ----
+    # gather-on-use (ZeRO): pull the FSDP-sharded expert weights together
+    # BEFORE the einsums — otherwise XLA all-reduces the (much larger)
+    # [E, C, D] activations over the FSDP axis (§Perf iteration 7)
+    w1 = shard_act(p["w1"].astype(cdt), "moe_weight")
+    w3 = shard_act(p["w3"].astype(cdt), "moe_weight")
+    w2 = shard_act(p["w2"].astype(cdt), "moe_weight")
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    h = act(jnp.einsum("ecd,edf->ecf", xe, w1))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, w3)
+    ye = jnp.einsum("ecf,efd->ecd", h, w2)                      # [E, C, D]
+
+    # ---- combine: weighted scatter-add back to tokens -------------------
+    # bf16 combine: the scatter-add result is psum'd over the model axis
+    # (EP combine); bf16 halves those wire bytes (§Perf iteration 6)
+    yflat = (ye.reshape(E * C, D).astype(jnp.float32)
+             * gate_at_slot[:, None]).astype(cdt)
+    out = jnp.zeros((T + 1, D), cdt).at[tok_at_slot].add(yflat)[:T]
+    out = out.astype(x.dtype).reshape(B, S, D)
+
+    if m.n_shared:
+        out = out + common.mlp_fwd(cfg, p["shared"], x)
+
+    # ---- aux losses ------------------------------------------------------
+    me = probs.mean(axis=0)                                     # [E]
+    ce = jnp.zeros((E,), jnp.float32).at[flat_e].add(1.0) / (T * K)
+    balance = E * jnp.sum(me * ce) * m.balance_coef
+    z = jnp.mean(jax.nn.logsumexp(logits, -1) ** 2) * m.router_z_coef
+    dropped = 1.0 - keep.mean()
+    aux = {
+        "moe_balance": balance,
+        "moe_z": z,
+        "moe_dropped": dropped,
+    }
+    return out, aux

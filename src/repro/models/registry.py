@@ -1,0 +1,78 @@
+"""Uniform model API over the four family implementations."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig, ShapeConfig
+from repro.models import transformer, xlstm, zamba
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    init: Callable
+    forward_train: Callable          # (cfg, params, **batch) -> (logits, aux)
+    init_cache: Optional[Callable]   # (cfg, B, Smax, dtype) -> cache
+    decode_step: Optional[Callable]  # (cfg, params, tokens, cache, lengths)
+
+
+def get_model(cfg: ArchConfig) -> ModelAPI:
+    if cfg.hybrid_attn_every > 0:
+        return ModelAPI(zamba.init, zamba.forward_train,
+                        zamba.init_cache, zamba.decode_step)
+    if cfg.xlstm is not None:
+        return ModelAPI(xlstm.init, xlstm.forward_train,
+                        xlstm.init_cache, xlstm.decode_step)
+    dec = None if cfg.encoder_only else transformer.decode_step
+    cache = None if cfg.encoder_only else transformer.init_cache
+    return ModelAPI(transformer.init, transformer.forward_train, cache, dec)
+
+
+def param_shapes(cfg: ArchConfig) -> Dict:
+    """Abstract param pytree (no allocation) for dry-runs."""
+    api = get_model(cfg)
+    return jax.eval_shape(lambda k: api.init(cfg, k), jax.random.key(0))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    Modality frontends are stubs: audio provides frame embeddings at
+    d_model, VLM provides InternViT patch features (DESIGN.md Sec 6).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        if cfg.encoder_only:
+            return {
+                "embeds": sds((B, S, cfg.d_model), jnp.bfloat16),
+                "labels": sds((B, S), i32),
+                "mask": sds((B, S), jnp.bool_),
+            }
+        if cfg.vlm is not None:
+            st = S - cfg.vlm.n_patches
+            return {
+                "tokens": sds((B, st), i32),
+                "patches": sds((B, cfg.vlm.n_patches, cfg.vlm.patch_dim),
+                               jnp.bfloat16),
+                "labels": sds((B, st), i32),
+                "mask": sds((B, st), jnp.bool_),
+            }
+        return {
+            "tokens": sds((B, S), i32),
+            "labels": sds((B, S), i32),
+            "mask": sds((B, S), jnp.bool_),
+        }
+    # decode: one new token against a cache of length S
+    api = get_model(cfg)
+    cache = jax.eval_shape(lambda: api.init_cache(cfg, B, S))
+    return {
+        "tokens": sds((B,), i32),
+        "lengths": sds((B,), i32),
+        "cache": cache,
+    }

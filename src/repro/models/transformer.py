@@ -1,0 +1,238 @@
+"""Transformer stack (dense / MoE / VLM / audio-encoder families).
+
+Layers are *stacked*: every per-layer param pytree carries a leading [L]
+axis and the stack runs under ``lax.scan`` (small HLO, fast multi-pod
+compiles, remat-friendly).  Per-layer attention windows (gemma3's 5:1
+local:global pattern) ride along as scan xs.
+
+API (all pure):
+  init(cfg, key)                 -> params
+  forward_train(cfg, params, tokens, patches=None, embeds=None)
+                                 -> (logits [B,S,V], aux)
+  init_cache(cfg, B, Smax)       -> cache pytree
+  decode_step(cfg, params, tokens [B], cache, lengths [B])
+                                 -> (logits [B,V], cache')
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ArchConfig
+from repro.distributed.ctx import shard_act
+from repro.models import common
+from repro.models.moe import init_moe, moe_fwd
+
+
+def layer_windows(cfg: ArchConfig) -> np.ndarray:
+    """Per-layer sliding window sizes (0 = full attention)."""
+    if cfg.window <= 0:
+        return np.zeros((cfg.n_layers,), np.int32)
+    w = np.full((cfg.n_layers,), cfg.window, np.int32)
+    if cfg.global_every > 0:
+        w[cfg.global_every - 1 :: cfg.global_every] = 0  # every k-th is global
+    return w
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(cfg: ArchConfig, key) -> Dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": common.init_norm(cfg, cfg.d_model),
+        "attn": common.init_attention(cfg, k1),
+        "ln2": common.init_norm(cfg, cfg.d_model),
+    }
+    if cfg.moe is not None:
+        p["moe"] = init_moe(cfg, k2)
+    else:
+        p["mlp"] = common.init_mlp(cfg, k2)
+    return p
+
+
+def init(cfg: ArchConfig, key) -> Dict:
+    kE, kL, kP = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kL, cfg.n_layers)
+    layers = jax.vmap(lambda k: _init_layer(cfg, k))(layer_keys)
+    params = {
+        "tok": common.init_embed(cfg, kE),
+        "layers": layers,
+        "ln_f": common.init_norm(cfg, cfg.d_model),
+    }
+    if cfg.vlm is not None:
+        pdt = common.dtype_of(cfg.param_dtype)
+        ka, kb = jax.random.split(kP)
+        params["projector"] = {
+            "w1": jax.random.normal(
+                ka, (cfg.vlm.patch_dim, cfg.d_model), pdt) * 0.02,
+            "w2": jax.random.normal(
+                kb, (cfg.d_model, cfg.d_model), pdt) * 0.02,
+        }
+    if cfg.encoder_only:
+        # audio frontend stub: frame features arrive at d_model directly;
+        # a learned input norm stands in for the conv feature projector.
+        params["in_norm"] = common.init_norm(cfg, cfg.d_model)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _layer_fwd(cfg: ArchConfig, lp: Dict, x, positions, window, causal: bool):
+    h = common.apply_norm(cfg, lp["ln1"], x)
+    x = x + common.attention_fwd(
+        cfg, lp["attn"], h, positions, window=window, causal=causal
+    )
+    x = shard_act(x, "residual")
+    h = common.apply_norm(cfg, lp["ln2"], x)
+    if cfg.moe is not None:
+        y, aux = moe_fwd(cfg, lp["moe"], h)
+    else:
+        y, aux = common.mlp_fwd(cfg, lp["mlp"], h), {}
+    x = x + y
+    x = shard_act(x, "residual")
+    return x, aux
+
+
+def _stack(cfg: ArchConfig, params: Dict, x, positions, causal: bool):
+    windows = jnp.asarray(layer_windows(cfg))
+
+    def body(carry, xs):
+        lp, window = xs
+        x = carry
+        x, aux = _layer_fwd(cfg, lp, x, positions, window, causal)
+        aux_sum = sum(aux.values()) if aux else jnp.zeros((), jnp.float32)
+        moe_aux = aux if aux else {
+            "moe_balance": jnp.zeros((), jnp.float32),
+            "moe_z": jnp.zeros((), jnp.float32),
+            "moe_dropped": jnp.zeros((), jnp.float32),
+        }
+        return x, (aux_sum, moe_aux)
+
+    fn = jax.checkpoint(body, policy=None) if cfg.remat else body
+    x, (aux_sums, moe_aux) = lax.scan(fn, x, (params["layers"], windows))
+    aux = {k: v.mean() for k, v in moe_aux.items()} if cfg.moe else {}
+    aux["aux_loss"] = aux_sums.sum()
+    return x, aux
+
+
+def forward_train(
+    cfg: ArchConfig,
+    params: Dict,
+    tokens: Optional[jax.Array] = None,     # [B, S_text]
+    patches: Optional[jax.Array] = None,    # [B, NP, patch_dim] (vlm)
+    embeds: Optional[jax.Array] = None,     # [B, S, d_model]    (audio)
+) -> Tuple[jax.Array, Dict]:
+    causal = not cfg.encoder_only
+    if cfg.encoder_only:
+        x = common.apply_norm(cfg, params["in_norm"], embeds.astype(
+            common.dtype_of(cfg.compute_dtype)))
+    else:
+        x = common.embed_tokens(cfg, params["tok"], tokens)
+        if cfg.vlm is not None:
+            cdt = common.dtype_of(cfg.compute_dtype)
+            pe = patches.astype(cdt) @ params["projector"]["w1"].astype(cdt)
+            pe = jax.nn.gelu(pe) @ params["projector"]["w2"].astype(cdt)
+            x = jnp.concatenate([pe, x], axis=1)
+    x = shard_act(x, "residual")
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    x, aux = _stack(cfg, params, x, positions, causal)
+    x = common.apply_norm(cfg, params["ln_f"], x)
+    logits = common.unembed(cfg, params["tok"], x)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def prefill(
+    cfg: ArchConfig, params: Dict, tokens: jax.Array, Smax: int,
+    cache_dtype=jnp.bfloat16,
+) -> Tuple[jax.Array, Dict]:
+    """Forward over a prompt batch, capturing the KV cache.
+
+    Returns (logits [B, S, V], cache with k/v valid on [:S]).  Padded prompt
+    tails are handled by the caller via per-sequence lengths (causality keeps
+    pads from contaminating earlier positions).
+    """
+    x = common.embed_tokens(cfg, params["tok"], tokens)
+    x = shard_act(x, "residual")
+    B, S = tokens.shape
+    positions = jnp.arange(S)
+    windows = jnp.asarray(layer_windows(cfg))
+
+    def body(x, xs):
+        lp, window = xs
+        h = common.apply_norm(cfg, lp["ln1"], x)
+        a, k, v = common.attention_fwd(
+            cfg, lp["attn"], h, positions, window=window, causal=True,
+            return_kv=True,
+        )
+        x = x + a
+        h = common.apply_norm(cfg, lp["ln2"], x)
+        if cfg.moe is not None:
+            y, _ = moe_fwd(cfg, lp["moe"], h)
+        else:
+            y = common.mlp_fwd(cfg, lp["mlp"], h)
+        return x + y, (k.astype(cache_dtype), v.astype(cache_dtype))
+
+    x, (ks, vs) = lax.scan(body, x, (params["layers"], windows))
+    x = common.apply_norm(cfg, params["ln_f"], x)
+    logits = common.unembed(cfg, params["tok"], x)
+    pad = Smax - S
+    cache = {
+        "k": jnp.pad(ks, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))),
+        "v": jnp.pad(vs, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))),
+    }
+    return logits, cache
+
+
+def init_cache(cfg: ArchConfig, B: int, Smax: int, dtype=jnp.bfloat16):
+    KVH, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    shape = (cfg.n_layers, B, KVH, Smax, hd)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+    }
+
+
+def decode_step(
+    cfg: ArchConfig,
+    params: Dict,
+    tokens: jax.Array,       # [B]
+    cache: Dict,
+    lengths: jax.Array,      # [B]
+) -> Tuple[jax.Array, Dict]:
+    x = common.embed_tokens(cfg, params["tok"], tokens[:, None])  # [B,1,D]
+    windows = jnp.asarray(layer_windows(cfg))
+
+    def body(x, xs):
+        lp, ck, cv, window = xs
+        h = common.apply_norm(cfg, lp["ln1"], x)
+        a, ck, cv = common.attention_decode(
+            cfg, lp["attn"], h, ck, cv, lengths, window=window
+        )
+        x = x + a
+        h = common.apply_norm(cfg, lp["ln2"], x)
+        if cfg.moe is not None:
+            y, _ = moe_fwd(cfg, lp["moe"], h)
+        else:
+            y = common.mlp_fwd(cfg, lp["mlp"], h)
+        return x + y, (ck, cv)
+
+    x, (ck, cv) = lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"], windows)
+    )
+    x = common.apply_norm(cfg, params["ln_f"], x)
+    logits = common.unembed(cfg, params["tok"], x)[:, 0]
+    return logits, {"k": ck, "v": cv}

@@ -1,0 +1,337 @@
+"""xLSTM: mLSTM (matrix memory, chunkwise-parallel) + sLSTM (scalar memory,
+recurrent) blocks, grouped m:1 (paper's xLSTM[7:1]).
+
+The mLSTM update  C_t = f_t C_{t-1} + i_t v_t k_t^T,  n_t = f_t n_{t-1} + i_t k_t,
+h_t = (C_t q_t) / max(|n_t . q_t|, 1)  has exactly the SSD algebra, so
+training reuses ``mamba2.ssd_chunked`` (decay = f, u = i·v, B = k, C = q) —
+one chunked kernel serves both SSM families (DESIGN.md Sec 6).  Gates use
+sigmoid rather than exponential-with-stabilizer (noted simplification).
+
+The sLSTM recurrence is nonlinear (h feeds back through R) and cannot be
+parallelized over time; it runs as a lax.scan over steps — the paper's
+reason to keep sLSTM blocks rare (1 in 8).
+
+d_ff = 0 in the assigned config: blocks carry their own up/down projections,
+there is no separate FFN.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ArchConfig
+from repro.distributed.ctx import shard_act
+from repro.models import common
+from repro.models.mamba2 import ssd_chunked, ssd_recurrent_step
+
+
+def _dims(cfg: ArchConfig):
+    x = cfg.xlstm
+    di = int(x.proj_factor * cfg.d_model)
+    nh = max(1, di // x.head_dim)
+    hd = di // nh
+    return di, nh, hd
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+def init_mlstm(cfg: ArchConfig, key) -> Dict:
+    x = cfg.xlstm
+    d = cfg.d_model
+    di, nh, hd = _dims(cfg)
+    pdt = common.dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 7)
+    s = 0.02
+    return {
+        "ln": common.init_norm(cfg, d),
+        "up": jax.random.normal(ks[0], (d, 2 * di), pdt) * s,
+        "conv_w": jax.random.normal(ks[1], (x.d_conv, di), pdt) * 0.2,
+        "conv_b": jnp.zeros((di,), pdt),
+        "wq": jax.random.normal(ks[2], (di, nh, hd), pdt) * s,
+        "wk": jax.random.normal(ks[3], (di, nh, hd), pdt) * s,
+        "wv": jax.random.normal(ks[4], (di, nh, hd), pdt) * s,
+        "w_if": jax.random.normal(ks[5], (di, nh, 2), jnp.float32) * s,
+        "b_if": jnp.concatenate(
+            [jnp.zeros((nh, 1)), jnp.full((nh, 1), 3.0)], axis=1
+        ),  # forget-gate bias ~ +3 (long memory at init)
+        "out_norm": common.init_norm(cfg, di),
+        "down": jax.random.normal(ks[6], (di, d), pdt)
+        * s / max(1, cfg.n_layers) ** 0.5,
+    }
+
+
+def _conv_causal(xbc, w, b, S):
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + S, :] * w[i][None, None, :] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def mlstm_fwd(cfg: ArchConfig, p: Dict, x: jax.Array) -> jax.Array:
+    cdt = common.dtype_of(cfg.compute_dtype)
+    B, S, D = x.shape
+    di, nh, hd = _dims(cfg)
+    h = common.apply_norm(cfg, p["ln"], x).astype(cdt)
+    up = h @ p["up"].astype(cdt)
+    main, gate = up[..., :di], up[..., di:]
+    c = _conv_causal(main, p["conv_w"].astype(cdt), p["conv_b"].astype(cdt), S)
+    q = jnp.einsum("bsd,dhk->bshk", c, p["wq"].astype(cdt))
+    k = jnp.einsum("bsd,dhk->bshk", c, p["wk"].astype(cdt)) / (hd ** 0.5)
+    v = jnp.einsum("bsd,dhk->bshk", main, p["wv"].astype(cdt))
+    gif = jnp.einsum(
+        "bsd,dhg->bshg", c.astype(jnp.float32), p["w_if"]
+    ) + p["b_if"]
+    ig = jax.nn.sigmoid(gif[..., 0])                       # [B,S,nh]
+    fg = jax.nn.sigmoid(gif[..., 1])
+
+    u = v * ig[..., None].astype(v.dtype)        # stays bf16 (iteration 4)
+    chunk = 256
+    # fused normalizer: run ONE ssd pass with the normalizer as an extra
+    # P-column (u' = [u | i]) — the [B,nc,H,Q,Q] decay/score tensors are the
+    # dominant HBM traffic and were previously built twice
+    # (EXPERIMENTS.md §Perf iteration 3b)
+    u_aug = jnp.concatenate([u, ig[..., None].astype(u.dtype)], axis=-1)
+    y_aug, _ = ssd_chunked(u_aug, fg, k, q, chunk)
+    y, yn = y_aug[..., :hd], y_aug[..., hd:]
+    y = y / jnp.maximum(jnp.abs(yn), 1.0)
+    y = y.reshape(B, S, di).astype(cdt) * jax.nn.silu(gate)
+    y = common.apply_norm(cfg, p["out_norm"], y)
+    return x + (y @ p["down"].astype(cdt)).astype(x.dtype)
+
+
+def init_mlstm_state(cfg: ArchConfig, B: int):
+    x = cfg.xlstm
+    di, nh, hd = _dims(cfg)
+    return {
+        "C": jnp.zeros((B, nh, hd, hd), jnp.float32),
+        "n": jnp.zeros((B, nh, 1, hd), jnp.float32),
+        "conv": jnp.zeros((B, x.d_conv - 1, di), jnp.float32),
+    }
+
+
+def mlstm_decode(cfg: ArchConfig, p: Dict, x: jax.Array, st: Dict):
+    cdt = common.dtype_of(cfg.compute_dtype)
+    B = x.shape[0]
+    di, nh, hd = _dims(cfg)
+    h = common.apply_norm(cfg, p["ln"], x).astype(cdt)
+    up = (h @ p["up"].astype(cdt))[:, 0]
+    main, gate = up[..., :di], up[..., di:]
+    hist = jnp.concatenate(
+        [st["conv"], main[:, None, :].astype(jnp.float32)], axis=1
+    )
+    c = jnp.einsum("bkc,kc->bc", hist, p["conv_w"].astype(jnp.float32))
+    c = jax.nn.silu(c + p["conv_b"].astype(jnp.float32))
+    q = jnp.einsum("bd,dhk->bhk", c, p["wq"].astype(jnp.float32))
+    k = jnp.einsum("bd,dhk->bhk", c, p["wk"].astype(jnp.float32)) / (hd ** 0.5)
+    v = jnp.einsum("bd,dhk->bhk", main.astype(jnp.float32), p["wv"].astype(jnp.float32))
+    gif = jnp.einsum("bd,dhg->bhg", c, p["w_if"]) + p["b_if"]
+    ig = jax.nn.sigmoid(gif[..., 0])
+    fg = jax.nn.sigmoid(gif[..., 1])
+    C, yC = ssd_recurrent_step(st["C"], v * ig[..., None], fg, k, q)
+    n, yn = ssd_recurrent_step(st["n"], ig[..., None], fg, k, q)
+    y = yC / jnp.maximum(jnp.abs(yn), 1.0)
+    y = y.reshape(B, di).astype(cdt) * jax.nn.silu(gate)
+    y = common.apply_norm(cfg, p["out_norm"], y)
+    out = x + (y @ p["down"].astype(cdt))[:, None, :].astype(x.dtype)
+    return out, {"C": C, "n": n, "conv": hist[:, 1:, :]}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+def init_slstm(cfg: ArchConfig, key) -> Dict:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    pdt = common.dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    s = 0.02
+    return {
+        "ln": common.init_norm(cfg, d),
+        "W": jax.random.normal(ks[0], (d, nh, 4, hd), jnp.float32) * s,
+        "R": jax.random.normal(ks[1], (nh, hd, 4, hd), jnp.float32) * s,
+        "b": jnp.zeros((nh, 4, hd)).at[:, 1].set(3.0),   # forget bias
+        "out": jax.random.normal(ks[2], (d, d), pdt)
+        * s / max(1, cfg.n_layers) ** 0.5,
+    }
+
+
+def _slstm_cell(p, x_t, state):
+    """x_t [B, d]; state (c, n, h) each [B, nh, hd]."""
+    c, n, h = state
+    g = jnp.einsum("bd,dhgk->bhgk", x_t, p["W"])
+    g = g + jnp.einsum("bhk,hkgj->bhgj", h, p["R"]) + p["b"]
+    i = jax.nn.sigmoid(g[:, :, 0])
+    f = jax.nn.sigmoid(g[:, :, 1])
+    z = jnp.tanh(g[:, :, 2])
+    o = jax.nn.sigmoid(g[:, :, 3])
+    c = f * c + i * z
+    n = f * n + i
+    h = o * c / jnp.maximum(n, 1.0)
+    return (c, n, h)
+
+
+def slstm_fwd(cfg: ArchConfig, p: Dict, x: jax.Array) -> jax.Array:
+    B, S, D = x.shape
+    nh = cfg.n_heads
+    hd = D // nh
+    xin = common.apply_norm(cfg, p["ln"], x).astype(jnp.float32)
+
+    # hoist the input projection out of the recurrent scan: one MXU matmul
+    # instead of 4096 tiny ones re-reading W every step
+    # (EXPERIMENTS.md §Perf iteration 3a)
+    gx = jnp.einsum("bsd,dhgk->bshgk", xin, p["W"]) + p["b"]
+
+    def cell(state, gx_t):
+        c, n, h = state
+        g = gx_t + jnp.einsum("bhk,hkgj->bhgj", h, p["R"])
+        i = jax.nn.sigmoid(g[:, :, 0])
+        f = jax.nn.sigmoid(g[:, :, 1])
+        z = jnp.tanh(g[:, :, 2])
+        o = jax.nn.sigmoid(g[:, :, 3])
+        c = f * c + i * z
+        n = f * n + i
+        h = o * c / jnp.maximum(n, 1.0)
+        return (c, n, h), h
+
+    # blocked time loop: T_BLOCK unrolled steps per scan iteration — the
+    # recurrence is exact but loop-boundary traffic amortizes 8x
+    # (EXPERIMENTS.md §Perf iteration 5)
+    T_BLOCK = 8 if S % 8 == 0 else 1
+    gx_t = gx.transpose(1, 0, 2, 3, 4)             # [S, B, nh, 4, hd]
+    gx_b = gx_t.reshape(S // T_BLOCK, T_BLOCK, B, nh, 4, hd)
+
+    def block(state, gx_blk):
+        outs = []
+        for t in range(T_BLOCK):
+            state, h = cell(state, gx_blk[t])
+            outs.append(h)
+        return state, jnp.stack(outs)
+
+    init = tuple(jnp.zeros((B, nh, hd), jnp.float32) for _ in range(3))
+    _, hs = lax.scan(block, init, gx_b)
+    hs = hs.reshape(S, B, nh, hd)
+    y = hs.transpose(1, 0, 2, 3).reshape(B, S, D)
+    cdt = common.dtype_of(cfg.compute_dtype)
+    return x + (y.astype(cdt) @ p["out"].astype(cdt)).astype(x.dtype)
+
+
+def init_slstm_state(cfg: ArchConfig, B: int):
+    nh = cfg.n_heads
+    hd = cfg.d_model // nh
+    return tuple(jnp.zeros((B, nh, hd), jnp.float32) for _ in range(3))
+
+
+def slstm_decode(cfg: ArchConfig, p: Dict, x: jax.Array, state):
+    xin = common.apply_norm(cfg, p["ln"], x).astype(jnp.float32)[:, 0]
+    state = _slstm_cell(p, xin, state)
+    B = x.shape[0]
+    y = state[2].reshape(B, -1)
+    cdt = common.dtype_of(cfg.compute_dtype)
+    out = x + (y.astype(cdt) @ p["out"].astype(cdt))[:, None, :].astype(x.dtype)
+    return out, state
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def _groups(cfg: ArchConfig) -> Tuple[int, int]:
+    m = cfg.xlstm.m_per_group
+    gsize = m + 1
+    assert cfg.n_layers % gsize == 0, (cfg.n_layers, gsize)
+    return cfg.n_layers // gsize, m
+
+
+def init(cfg: ArchConfig, key) -> Dict:
+    G, m = _groups(cfg)
+    kE, kM, kS = jax.random.split(key, 3)
+    mk = jax.random.split(kM, G * m)
+    sk = jax.random.split(kS, G)
+    return {
+        "tok": common.init_embed(cfg, kE),
+        "mlstm": jax.vmap(lambda k: init_mlstm(cfg, k))(mk),
+        "slstm": jax.vmap(lambda k: init_slstm(cfg, k))(sk),
+        "ln_f": common.init_norm(cfg, cfg.d_model),
+    }
+
+
+def forward_train(cfg: ArchConfig, params: Dict, tokens, **_):
+    G, m = _groups(cfg)
+    x = common.embed_tokens(cfg, params["tok"], tokens)
+    x = shard_act(x, "residual")
+
+    ml = jax.tree.map(
+        lambda a: a.reshape((G, m) + a.shape[1:]), params["mlstm"]
+    )
+
+    # remat at PER-LAYER granularity: checkpointing the whole 8-layer group
+    # makes the backward stack every layer's intermediates ([7, B, S, ...])
+    # before consuming them (EXPERIMENTS.md §Perf iteration 4)
+    def one_mlstm(x, lp):
+        y = mlstm_fwd(cfg, lp, x)
+        return shard_act(y, "residual"), ()
+
+    def one_slstm(x, sp):
+        y = slstm_fwd(cfg, sp, x)
+        return shard_act(y, "residual"), ()
+
+    if cfg.remat:
+        one_mlstm = jax.checkpoint(one_mlstm, policy=None)
+        one_slstm = jax.checkpoint(one_slstm, policy=None)
+
+    def group(x, xs):
+        mlp_g, sl_g = xs
+        x, _ = lax.scan(one_mlstm, x, mlp_g)
+        x, _ = one_slstm(x, sl_g)
+        return x, ()
+
+    x, _ = lax.scan(group, x, (ml, params["slstm"]))
+    x = common.apply_norm(cfg, params["ln_f"], x)
+    logits = common.unembed(cfg, params["tok"], x)
+    return logits, {"aux_loss": jnp.zeros((), jnp.float32)}
+
+
+def init_cache(cfg: ArchConfig, B: int, Smax: int = 0, dtype=jnp.bfloat16):
+    G, m = _groups(cfg)
+    mst = init_mlstm_state(cfg, B)
+    return {
+        "mlstm": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (G * m,) + x.shape), mst
+        ),
+        "slstm": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (G,) + x.shape),
+            init_slstm_state(cfg, B),
+        ),
+    }
+
+
+def decode_step(cfg: ArchConfig, params: Dict, tokens, cache, lengths):
+    G, m = _groups(cfg)
+    x = common.embed_tokens(cfg, params["tok"], tokens[:, None])
+    new_m, new_s = [], []
+    for g in range(G):
+        for j in range(m):
+            li = g * m + j
+            lp = jax.tree.map(lambda a, li=li: a[li], params["mlstm"])
+            st = jax.tree.map(lambda a, li=li: a[li], cache["mlstm"])
+            x, st = mlstm_decode(cfg, lp, x, st)
+            new_m.append(st)
+        sp = jax.tree.map(lambda a, g=g: a[g], params["slstm"])
+        st = jax.tree.map(lambda a, g=g: a[g], cache["slstm"])
+        x, st = slstm_decode(cfg, sp, x, st)
+        new_s.append(st)
+    x = common.apply_norm(cfg, params["ln_f"], x)
+    logits = common.unembed(cfg, params["tok"], x)[:, 0]
+    cache = {
+        "mlstm": jax.tree.map(lambda *xs: jnp.stack(xs), *new_m),
+        "slstm": jax.tree.map(lambda *xs: jnp.stack(xs), *new_s),
+    }
+    return logits, cache

@@ -1,0 +1,128 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a *shared* attention block.
+
+Every ``hybrid_attn_every``-th layer applies one globally shared
+attention+MLP block (same params at every occurrence) — the Zamba2 trick
+of amortizing attention params across a cheap SSM backbone.  (The released
+model alternates two shared blocks; we use one — DESIGN.md Sec 6.)
+
+Backbone layers scan with stacked params; the shared block is closed over
+and applied under ``lax.cond`` on the layer index.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ArchConfig
+from repro.distributed.ctx import shard_act
+from repro.models import common, mamba2
+
+
+def _init_shared(cfg: ArchConfig, key) -> Dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": common.init_norm(cfg, cfg.d_model),
+        "attn": common.init_attention(cfg, k1),
+        "ln2": common.init_norm(cfg, cfg.d_model),
+        "mlp": common.init_mlp(cfg, k2),
+    }
+
+
+def init(cfg: ArchConfig, key) -> Dict:
+    kE, kL, kS = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kL, cfg.n_layers)
+    return {
+        "tok": common.init_embed(cfg, kE),
+        "mamba": jax.vmap(lambda k: mamba2.init_block(cfg, k))(layer_keys),
+        "shared": _init_shared(cfg, kS),
+        "ln_f": common.init_norm(cfg, cfg.d_model),
+    }
+
+
+def _shared_fwd(cfg: ArchConfig, sp: Dict, x, positions):
+    h = common.apply_norm(cfg, sp["ln1"], x)
+    x = x + common.attention_fwd(
+        cfg, sp["attn"], h, positions, window=jnp.int32(0), causal=True
+    )
+    h = common.apply_norm(cfg, sp["ln2"], x)
+    return x + common.mlp_fwd(cfg, sp["mlp"], h)
+
+
+def forward_train(cfg: ArchConfig, params: Dict, tokens, **_) -> Tuple:
+    x = common.embed_tokens(cfg, params["tok"], tokens)
+    x = shard_act(x, "residual")
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    k = cfg.hybrid_attn_every
+
+    def body(x, xs):
+        lp, idx = xs
+        x = mamba2.block_fwd(cfg, lp, x)
+        x = lax.cond(
+            (idx + 1) % k == 0,
+            lambda h: _shared_fwd(cfg, params["shared"], h, positions),
+            lambda h: h,
+            x,
+        )
+        x = shard_act(x, "residual")
+        return x, ()
+
+    fn = jax.checkpoint(body, policy=None) if cfg.remat else body
+    x, _ = lax.scan(fn, x, (params["mamba"], jnp.arange(cfg.n_layers)))
+    x = common.apply_norm(cfg, params["ln_f"], x)
+    logits = common.unembed(cfg, params["tok"], x)
+    return logits, {"aux_loss": jnp.zeros((), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, B: int, Smax: int, dtype=jnp.bfloat16):
+    n_occ = cfg.n_layers // cfg.hybrid_attn_every
+    st = mamba2.init_state(cfg, B)
+    KVH, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "mamba": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), st
+        ),
+        "attn_k": jnp.zeros((n_occ, B, KVH, Smax, hd), dtype),
+        "attn_v": jnp.zeros((n_occ, B, KVH, Smax, hd), dtype),
+    }
+
+
+def decode_step(cfg: ArchConfig, params: Dict, tokens, cache, lengths):
+    x = common.embed_tokens(cfg, params["tok"], tokens[:, None])
+    k = cfg.hybrid_attn_every
+    sp = params["shared"]
+    new_mamba = []
+    ak, av = cache["attn_k"], cache["attn_v"]
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a, i=i: a[i], params["mamba"])
+        st = jax.tree.map(lambda a, i=i: a[i], cache["mamba"])
+        x, st = mamba2.block_decode(cfg, lp, x, st)
+        new_mamba.append(st)
+        if (i + 1) % k == 0:
+            occ = (i + 1) // k - 1
+            h = common.apply_norm(cfg, sp["ln1"], x)
+            a, nk, nv = common.attention_decode(
+                cfg, sp["attn"], h, ak[occ], av[occ], lengths,
+                window=jnp.int32(0),
+            )
+            x = x + a
+            ak = ak.at[occ].set(nk)
+            av = av.at[occ].set(nv)
+            h = common.apply_norm(cfg, sp["ln2"], x)
+            x = x + common.mlp_fwd(cfg, sp["mlp"], h)
+    x = common.apply_norm(cfg, params["ln_f"], x)
+    logits = common.unembed(cfg, params["tok"], x)[:, 0]
+    new_cache = {
+        "mamba": jax.tree.map(lambda *xs: jnp.stack(xs), *new_mamba),
+        "attn_k": ak,
+        "attn_v": av,
+    }
+    return logits, new_cache

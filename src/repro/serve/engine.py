@@ -1,0 +1,218 @@
+"""Continuous-batching serving engine with an Uruv page/prefix table.
+
+TPU-native serving keeps *slot-based contiguous* KV caches (paged gather is
+a GPU idiom; TPU engines — JetStream-style — use fixed decode slots and
+stream the cache; DESIGN.md Sec 2).  The paper's store provides the two
+shared indexes a real engine needs, concurrently and linearizably:
+
+  * prefix cache — key = rolling hash of a prompt prefix; value packs
+    (slot, length).  Admission SEARCHes the longest cached prefix and
+    copies the donor slot's KV; completed prompts INSERT their prefixes.
+    Version timestamps give LRU eviction for free (oldest-ts versions).
+  * sequence table — key = request id; value = slot; the scheduler's
+    SNAPSHOT + RANGEQUERY sees a consistent view of in-flight sequences
+    while admissions/completions keep mutating (the wait-free claim).
+
+Decode is one jitted step over all slots; finished/empty slots are masked
+by length.  Works with any arch exposing decode_step; transformer-family
+archs also get one-shot prefill.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.core import batch as uruv_batch
+from repro.core import store as uruv_store
+from repro.models import transformer
+from repro.models.registry import get_model
+
+
+def prefix_hash(tokens) -> int:
+    h = 2166136261
+    for t in tokens:
+        h = (h * 16777619 + int(t) + 1) & 0x7FFFFFFF
+    return int(h) or 1
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int = 16
+    eos: int = -1
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    prefix_reused: int = 0
+
+
+class Engine:
+    def __init__(self, cfg: ArchConfig, params, *, n_slots: int = 4,
+                 max_len: int = 128):
+        self.cfg = cfg
+        self.params = params
+        self.api = get_model(cfg)
+        assert self.api.decode_step is not None
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.cache = self.api.init_cache(cfg, n_slots, max_len)
+        self.lengths = np.zeros(n_slots, np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * n_slots
+        self.queue: List[Request] = []
+        self.table = uruv_store.create(uruv_store.UruvConfig(
+            leaf_cap=16, max_leaves=1024, max_versions=1 << 14))
+        self._slot_keys: Dict[int, List[int]] = {i: [] for i in range(n_slots)}
+        self._is_tf = cfg.family in ("dense", "moe", "vlm") and cfg.vlm is None
+
+        self._decode = jax.jit(
+            lambda p, t, c, l: self.api.decode_step(cfg, p, t, c, l)
+        )
+        if self._is_tf:
+            self._prefill = jax.jit(
+                lambda p, t: transformer.prefill(cfg, p, t, max_len),
+                static_argnums=(),
+            )
+
+    # ------------------------------------------------------------- admission
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _lookup_prefix(self, prompt: List[int]) -> Tuple[int, int]:
+        """Longest cached prefix -> (donor_slot, plen); (-1, 0) if none."""
+        best = (-1, 0)
+        keys, plens = [], []
+        for plen in range(1, len(prompt) + 1):
+            keys.append(prefix_hash(prompt[:plen]))
+            plens.append(plen)
+        snap = int(np.asarray(self.table.ts))
+        vals = np.asarray(uruv_store.bulk_lookup(
+            self.table,
+            jnp.asarray(np.array(keys, np.int32)),
+            jnp.asarray(snap, jnp.int32),
+        ))
+        for plen, v in zip(plens, vals):
+            if v >= 0:
+                slot, ln = int(v) >> 16, int(v) & 0xFFFF
+                if ln >= plen and self.slot_req[slot] is None or (
+                    self.slot_req[slot] is not None and ln >= plen
+                ):
+                    best = (slot, plen)
+        return best
+
+    def _publish_prefixes(self, slot: int, prompt: List[int]) -> None:
+        ks, vs = [], []
+        for plen in range(1, len(prompt) + 1):
+            ks.append(prefix_hash(prompt[:plen]))
+            vs.append((slot << 16) | plen)
+        self.table, _ = uruv_batch.apply_updates(
+            self.table, np.array(ks, np.int32), np.array(vs, np.int32))
+        self._slot_keys[slot].extend(ks)
+
+    def _retire_slot(self, slot: int) -> None:
+        ks = self._slot_keys[slot]
+        if ks:
+            self.table, _ = uruv_batch.apply_updates(
+                self.table, np.array(ks, np.int32),
+                np.full(len(ks), uruv_store.TOMBSTONE, np.int32))
+            self._slot_keys[slot] = []
+
+    def _copy_kv(self, dst: int, src: int, upto: int) -> None:
+        def cp(x):
+            if x.ndim >= 4 and x.shape[1] == self.n_slots:  # [L,B,...,S,hd]
+                return x.at[:, dst, ..., :upto, :].set(x[:, src, ..., :upto, :])
+            return x
+        self.cache = jax.tree.map(cp, self.cache)
+
+    def _admit(self) -> None:
+        for slot in range(self.n_slots):
+            if self.slot_req[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            self._retire_slot(slot)
+            donor, plen = self._lookup_prefix(req.prompt)
+            if donor >= 0 and donor != slot and plen > 1 and self._is_tf:
+                self._copy_kv(slot, donor, plen)
+                start, base_len = plen, plen
+                req.prefix_reused = plen
+            else:
+                start, base_len = 0, 0
+            # feed remaining prompt tokens
+            if self._is_tf and start == 0 and len(req.prompt) > 1:
+                toks = jnp.asarray(
+                    np.array(req.prompt, np.int32)[None, :])
+                _, cache1 = self._prefill(self.params, toks)
+                def put(c, c1):
+                    if c.ndim >= 4 and c.shape[1] == self.n_slots:
+                        return c.at[:, slot].set(c1[:, 0])
+                    return c
+                self.cache = jax.tree.map(put, self.cache, cache1)
+                self.lengths[slot] = len(req.prompt)
+            else:
+                # step-by-step prompt feed (SSM families / partial reuse)
+                self.lengths[slot] = base_len
+                for t in req.prompt[start:]:
+                    self._step_single(slot, t)
+            self.slot_req[slot] = req
+            self._publish_prefixes(slot, req.prompt)
+
+    def _step_single(self, slot: int, token: int) -> None:
+        toks = np.zeros(self.n_slots, np.int32)
+        toks[slot] = token
+        logits, cache = self._decode(
+            self.params, jnp.asarray(toks), self.cache,
+            jnp.asarray(self.lengths))
+        self.cache = cache
+        self.lengths[slot] += 1
+        self._last_logits = np.asarray(logits)
+
+    # ----------------------------------------------------------------- steps
+    def step(self) -> None:
+        """One engine tick: admit, batched decode, completions."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return
+        toks = np.zeros(self.n_slots, np.int32)
+        for i in active:
+            r = self.slot_req[i]
+            toks[i] = (r.out[-1] if r.out else r.prompt[-1])
+        logits, cache = self._decode(
+            self.params, jnp.asarray(toks), self.cache,
+            jnp.asarray(self.lengths))
+        self.cache = cache
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        for i in active:
+            r = self.slot_req[i]
+            self.lengths[i] += 1
+            tok = int(nxt[i])
+            r.out.append(tok)
+            if (tok == r.eos or len(r.out) >= r.max_new
+                    or self.lengths[i] >= self.max_len - 1):
+                r.done = True
+                self.slot_req[i] = None
+
+    def run(self, requests: List[Request], max_ticks: int = 1000
+            ) -> List[Request]:
+        for r in requests:
+            self.submit(r)
+        done: List[Request] = []
+        for _ in range(max_ticks):
+            self.step()
+            done = [r for r in requests if r.done]
+            if len(done) == len(requests):
+                break
+        return requests
+
+    # scheduler view: consistent snapshot of in-flight work
+    def snapshot_view(self) -> List[Tuple[int, int]]:
+        self.table, snap = uruv_store.snapshot(self.table)
+        self.table, items = uruv_batch.range_query_all(
+            self.table, 0, 2**31 - 3, int(snap))
+        self.table = uruv_store.release(self.table, int(snap))
+        return items

@@ -1,0 +1,145 @@
+"""Step builders: loss, train_step (grad-accum, clip, AdamW), serve steps.
+
+These are the functions the launcher jits with explicit in/out shardings
+(repro.launch.dryrun / repro.launch.train).  They are mesh-agnostic: all
+distribution comes from shardings + the activation-sharding context.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ArchConfig
+from repro.models import common
+from repro.models.registry import get_model
+from repro.optim import adamw
+
+
+class TrainState(NamedTuple):
+    params: Dict
+    opt: adamw.OptState
+    step: jax.Array
+
+
+def init_state(cfg: ArchConfig, key) -> TrainState:
+    api = get_model(cfg)
+    params = api.init(cfg, key)
+    return TrainState(params=params, opt=adamw.init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def loss_fn(cfg: ArchConfig, params, batch) -> Tuple[jax.Array, Dict]:
+    api = get_model(cfg)
+    labels = batch["labels"]
+    mask = batch["mask"]
+    if cfg.encoder_only:
+        logits, aux = api.forward_train(cfg, params, embeds=batch["embeds"])
+    elif cfg.vlm is not None:
+        logits, aux = api.forward_train(
+            cfg, params, tokens=batch["tokens"], patches=batch["patches"]
+        )
+        logits = logits[:, cfg.vlm.n_patches :]
+    else:
+        logits, aux = api.forward_train(cfg, params, tokens=batch["tokens"])
+    loss, metrics = common.cross_entropy(logits, labels, mask)
+    total = loss + aux.get("aux_loss", 0.0)
+    metrics = dict(metrics, loss=loss, **{
+        k: v for k, v in aux.items() if k != "aux_loss"})
+    return total, metrics
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    cfg.accum_steps > 1 runs gradient accumulation over microbatches (the
+    global batch is split on its leading dim inside the step), bounding
+    activation memory at 76B scale.
+    """
+
+    def grads_of(params, batch):
+        (_, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch), has_aux=True
+        )(params)
+        return grads, metrics
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        A = cfg.accum_steps
+        if A > 1:
+            def split(x):
+                return x.reshape((A, x.shape[0] // A) + x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+
+            def acc2(carry, mb):
+                (mets, g0) = carry
+                (l, metrics), g = jax.value_and_grad(
+                    lambda p: loss_fn(cfg, p, mb), has_aux=True
+                )(state.params)
+                g0 = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / A, g0, g
+                )
+                mets = jax.tree.map(lambda a, b: a + b / A, mets, metrics)
+                return (mets, g0), ()
+
+            met0 = jax.eval_shape(
+                lambda p: loss_fn(cfg, p, jax.tree.map(lambda x: x[0], micro))[1],
+                state.params,
+            )
+            met0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), met0)
+            (metrics, grads), _ = lax.scan(acc2, (met0, zero), micro)
+        else:
+            grads, metrics = grads_of(state.params, batch)
+
+        params, opt, opt_metrics = adamw.update(
+            opt_cfg, state.params, grads, state.opt
+        )
+        metrics = dict(metrics, **opt_metrics)
+        return TrainState(params, opt, state.step + 1), metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    """Inference prefill: logits for a full prompt batch (no labels)."""
+    api = get_model(cfg)
+
+    def prefill_step(params, batch) -> jax.Array:
+        if cfg.encoder_only:
+            logits, _ = api.forward_train(cfg, params, embeds=batch["embeds"])
+        elif cfg.vlm is not None:
+            logits, _ = api.forward_train(
+                cfg, params, tokens=batch["tokens"], patches=batch["patches"]
+            )
+        else:
+            logits, _ = api.forward_train(cfg, params, tokens=batch["tokens"])
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    """One decode step: greedy next token + updated cache."""
+    api = get_model(cfg)
+    assert api.decode_step is not None, f"{cfg.name} has no decode step"
+
+    def serve_step(params, batch):
+        logits, cache = api.decode_step(
+            cfg, params, batch["tokens"], batch["cache"], batch["lengths"]
+        )
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return {
+            "tokens": next_tok,
+            "lengths": batch["lengths"] + 1,
+            "cache": cache,
+            "logits": logits,
+        }
+
+    return serve_step

@@ -1,0 +1,77 @@
+"""Activation-sharding context: spec selection + divisibility guards.
+
+These are the rules whose violation caused §Perf iteration 1 (TB-scale
+cache re-gathers), so they get their own regression tests."""
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.ctx import ShardCtx, _guard, shard_act, use_mesh
+from repro.launch.mesh import make_host_mesh
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+POD = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_kv4_matches_batch_layout():
+    ctx = ShardCtx(MESH)
+    assert tuple(ctx.spec("kv4", 4)) == ("data", None, "model", None)
+
+
+def test_kv4_long_context_seq_over_all():
+    ctx = ShardCtx(MESH, long_context=True)
+    spec = tuple(ctx.spec("kv4", 4))
+    assert spec[2] == ("data", "model")
+    ctx = ShardCtx(POD, long_context=True)
+    assert tuple(ctx.spec("kv4", 4))[2] == ("pod", "data", "model")
+
+
+def test_residual_sequence_parallel_toggle():
+    on = ShardCtx(MESH, sequence_parallel=True)
+    off = ShardCtx(MESH, sequence_parallel=False)
+    assert tuple(on.spec("residual", 3)) == ("data", "model", None)
+    assert tuple(off.spec("residual", 3)) == ("data", None, None)
+
+
+def test_moe_specs():
+    ctx = ShardCtx(MESH)
+    assert tuple(ctx.spec("moe_experts", 3)) == ("model", "data", None)
+    assert tuple(ctx.spec("moe_weight", 3)) == ("model", None, None)
+
+
+def test_guard_drops_nondivisible_axes():
+    spec = _guard(P("data", None, "model", None),
+                  (24, 5, 2048, 64), MESH)
+    # 24 % 16 != 0 -> replicated; 2048 % 16 == 0 -> kept
+    assert tuple(spec) == (None, None, "model", None)
+    spec = _guard(P(("pod", "data"), None), (64, 8), POD)
+    assert tuple(spec) == (("pod", "data"), None)
+    spec = _guard(P(("pod", "data"), None), (33, 8), POD)
+    assert tuple(spec) == (None, None)
+
+
+def test_shard_act_noop_outside_ctx():
+    import jax.numpy as jnp
+
+    x = jnp.zeros((4, 8))
+    assert shard_act(x, "residual") is x
+
+
+def test_shard_act_applies_constraint_under_mesh():
+    import jax.numpy as jnp
+
+    mesh = make_host_mesh(1, 1)
+    with use_mesh(mesh):
+        def f(x):
+            return shard_act(x, "residual") * 2
+
+        out = jax.jit(f)(jnp.ones((2, 4, 8)))
+        assert out.shape == (2, 4, 8)

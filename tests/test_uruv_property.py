@@ -1,0 +1,108 @@
+"""Property-based tests (hypothesis): the JAX store is indistinguishable
+from the sequential oracle under arbitrary announce histories, and
+snapshots are linearizable across compaction."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import batch as B
+from repro.core import store as S
+from repro.core.ref import (
+    NOT_FOUND, TOMBSTONE, OP_DELETE, OP_INSERT, OP_SEARCH, RefStore,
+)
+
+CFG = S.UruvConfig(leaf_cap=8, max_leaves=512, max_versions=1 << 14,
+                   max_chain=32)
+
+op_st = st.tuples(
+    st.sampled_from([OP_INSERT, OP_INSERT, OP_DELETE, OP_SEARCH]),
+    st.integers(0, 80),
+    st.integers(0, 1000),
+)
+batch_st = st.lists(op_st, min_size=1, max_size=24)
+history_st = st.lists(batch_st, min_size=1, max_size=6)
+
+SET = settings(
+    max_examples=40, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+
+
+@given(history_st)
+@SET
+def test_history_equivalence(history):
+    store = S.create(CFG)
+    ref = RefStore()
+    for ops in history:
+        store, res = B.apply_batch(store, ops)
+        assert res == ref.apply_batch(ops)
+    assert S.live_items(store) == ref.live_items()
+    S.check_invariants(store)
+    assert int(store.ts) == ref.ts
+
+
+@given(history_st, st.integers(0, 5), st.integers(0, 80), st.integers(0, 80))
+@SET
+def test_snapshot_linearizability_across_compaction(history, snap_after,
+                                                    k1, k2):
+    """A snapshot taken mid-history reads the same range result before and
+    after arbitrary later updates AND a compaction (paper Sec 5.1 + App E)."""
+    if k2 < k1:
+        k1, k2 = k2, k1
+    store = S.create(CFG)
+    ref = RefStore()
+    snap = rsnap = None
+    want = None
+    for i, ops in enumerate(history):
+        if i == min(snap_after, len(history) - 1) and snap is None:
+            store, snap = S.snapshot(store)
+            rsnap = ref.snapshot()
+            assert int(snap) == rsnap
+            want = ref.range_query(k1, k2, rsnap)
+            store, got = B.range_query_all(store, k1, k2, int(snap))
+            assert got == want
+        store, _ = B.apply_batch(store, ops)
+        ref.apply_batch(ops)
+    if snap is not None:
+        store, got = B.range_query_all(store, k1, k2, int(snap))
+        assert got == want
+        store, _ = S.compact(store)
+        store, got = B.range_query_all(store, k1, k2, int(snap))
+        assert got == want, "compaction must not disturb active snapshots"
+        S.check_invariants(store)
+
+
+@given(st.lists(st.integers(0, 100), min_size=1, max_size=40),
+       st.integers(1, 16))
+@SET
+def test_round_splitting_invariance(keys, width):
+    """Applying one announce array in arbitrary round widths (the slow path)
+    yields the same store contents as the oracle's sequential application."""
+    store = S.create(CFG)
+    ref = RefStore()
+    keys = np.array(keys, np.int32)
+    vals = (keys * 3 + 1).astype(np.int32)
+    for i in range(0, len(keys), width):
+        store, _ = B.apply_updates(store, keys[i:i+width], vals[i:i+width])
+    ref.apply_batch([(OP_INSERT, int(k), int(v))
+                     for k, v in zip(keys, vals)])
+    assert S.live_items(store) == ref.live_items()
+
+
+@given(st.lists(st.tuples(st.integers(0, 40), st.integers(0, 100)),
+                min_size=1, max_size=32))
+@SET
+def test_search_sees_latest_version(pairs):
+    store = S.create(CFG)
+    ref = RefStore()
+    keys = np.array([k for k, _ in pairs], np.int32)
+    vals = np.array([v for _, v in pairs], np.int32)
+    store, _ = B.apply_updates(store, keys, vals)
+    ref.apply_batch([(OP_INSERT, int(k), int(v))
+                     for k, v in zip(keys, vals)])
+    q = np.unique(keys)
+    got = np.asarray(S.bulk_lookup(
+        store, jnp.asarray(q), jnp.asarray(int(store.ts), jnp.int32)))
+    want = [ref.search(int(k)) for k in q]
+    assert got.tolist() == want

@@ -1,0 +1,81 @@
+"""Oracle self-consistency + baseline (FlatStore) behaviour."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import baseline as BL
+from repro.core.ref import (
+    NOT_FOUND, TOMBSTONE, OP_DELETE, OP_INSERT, OP_SEARCH, RefStore,
+)
+
+
+def test_ref_basic_adt():
+    r = RefStore()
+    r.insert(5, 50)
+    r.insert(3, 30)
+    assert r.search(5) == 50
+    assert r.search(9) == NOT_FOUND
+    assert r.delete(5)
+    assert r.search(5) == NOT_FOUND
+    assert not r.delete(5)              # already tombstoned
+    assert r.range_query(0, 10) == [(3, 30)]
+
+
+def test_ref_snapshot_reads():
+    r = RefStore()
+    r.insert(1, 10)
+    snap = r.snapshot()
+    r.insert(1, 11)
+    r.insert(2, 20)
+    assert r.search_at(1, snap) == 10
+    assert r.search_at(2, snap) == NOT_FOUND
+    assert r.range_query(0, 5, snap) == [(1, 10)]
+    assert r.range_query(0, 5) == [(1, 11), (2, 20)]
+    r.release(snap)
+
+
+def test_ref_compact_respects_tracker():
+    r = RefStore()
+    r.insert(1, 10)
+    snap = r.snapshot()
+    r.insert(1, 11)
+    r.delete(2)
+    r.compact()
+    assert r.search_at(1, snap) == 10   # retained: snapshot active
+    r.release(snap)
+    n = r.compact()
+    assert n > 0
+    assert r.search(1) == 11
+
+
+def test_ref_batch_timestamps():
+    r = RefStore()
+    res = r.apply_batch([
+        (OP_INSERT, 1, 10), (OP_SEARCH, 1, 0), (OP_DELETE, 1, 0),
+        (OP_SEARCH, 1, 0),
+    ])
+    assert res == [NOT_FOUND, 10, 10, NOT_FOUND]
+    assert r.ts == 4
+
+
+def test_flat_baseline_not_linearizable_under_updates():
+    """The baseline's unvalidated scan can observe a mixed (torn) state;
+    the validated scan retries — the cost Uruv's MVCC avoids."""
+    b = BL.create(256)
+    keys = np.arange(10, dtype=np.int32)
+    b = BL.bulk_update(b, jnp.asarray(keys), jnp.asarray(keys * 10))
+
+    versions = [b]
+    # a concurrent updater flips all values between the two scans
+    def store_ref():
+        if len(versions) == 1:
+            versions.append(BL.bulk_update(
+                versions[0], jnp.asarray(keys),
+                jnp.asarray(keys * 10 + 1)))
+            return versions[0]
+        return versions[-1]
+
+    res, scans = BL.range_query_validated(store_ref, 0, 9, max_results=32)
+    assert scans >= 2                   # needed at least one retry
+    vals = [v for _, v in res]
+    assert vals == (keys * 10 + 1).tolist()

@@ -1,0 +1,197 @@
+"""UruvStore vs the sequential oracle: deterministic scenarios."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import batch as B
+from repro.core import store as S
+from repro.core.ref import (
+    KEY_MAX, NOT_FOUND, TOMBSTONE, OP_DELETE, OP_INSERT, OP_SEARCH, RefStore,
+)
+
+CFG = S.UruvConfig(leaf_cap=8, max_leaves=256, max_versions=8192, max_chain=16)
+
+
+def fresh():
+    return S.create(CFG), RefStore()
+
+
+def apply_ref_updates(ref, keys, vals):
+    return ref.apply_batch([(OP_INSERT, int(k), int(v))
+                            for k, v in zip(keys, vals)])
+
+
+def test_empty_lookup():
+    st, _ = fresh()
+    out = S.bulk_lookup(st, jnp.asarray([1, 5, KEY_MAX], jnp.int32),
+                        jnp.asarray(100, jnp.int32))
+    assert np.asarray(out).tolist() == [NOT_FOUND] * 3
+
+
+def test_insert_search_delete_roundtrip():
+    st, ref = fresh()
+    keys = np.array([10, 20, 30, 20], np.int32)     # dup key in one batch
+    vals = np.array([1, 2, 3, 4], np.int32)
+    st, prev = B.apply_updates(st, keys, vals)
+    rprev = apply_ref_updates(ref, keys, vals)
+    assert prev.tolist() == rprev
+    assert S.live_items(st) == [(10, 1), (20, 4), (30, 3)]
+    # delete 20
+    st, prev = B.apply_updates(
+        st, np.array([20], np.int32), np.array([TOMBSTONE], np.int32))
+    assert prev.tolist() == [4]
+    ref.apply_batch([(OP_DELETE, 20, 0)])
+    assert S.live_items(st) == ref.live_items() == [(10, 1), (30, 3)]
+    S.check_invariants(st)
+
+
+def test_randomized_vs_oracle():
+    rng = np.random.default_rng(0)
+    st, ref = fresh()
+    for it in range(25):
+        keys = rng.integers(0, 150, 16).astype(np.int32)
+        vals = rng.integers(0, 1000, 16).astype(np.int32)
+        dels = rng.random(16) < 0.25
+        vals = np.where(dels, TOMBSTONE, vals).astype(np.int32)
+        st, prev = B.apply_updates(st, keys, vals)
+        rprev = apply_ref_updates(ref, keys, vals)
+        np.testing.assert_array_equal(prev, rprev, err_msg=f"iter {it}")
+        S.check_invariants(st)
+        assert S.live_items(st) == ref.live_items()
+    # clock agreement -> identical snapshot semantics
+    assert int(st.ts) == ref.ts
+
+
+def test_mixed_batch_linearization():
+    rng = np.random.default_rng(1)
+    st, ref = fresh()
+    keys = rng.integers(0, 60, 32).astype(np.int32)
+    vals = rng.integers(0, 100, 32).astype(np.int32)
+    st, _ = B.apply_updates(st, keys, vals)
+    apply_ref_updates(ref, keys, vals)
+    ops = []
+    for i in range(24):
+        r = rng.random()
+        k = int(rng.integers(0, 70))
+        if r < 0.4:
+            ops.append((OP_INSERT, k, int(rng.integers(0, 100))))
+        elif r < 0.6:
+            ops.append((OP_DELETE, k, 0))
+        else:
+            ops.append((OP_SEARCH, k, 0))
+    st, res = B.apply_batch(st, ops)
+    assert res == ref.apply_batch(ops)
+
+
+def test_snapshot_isolation_and_range():
+    rng = np.random.default_rng(2)
+    st, ref = fresh()
+    keys = rng.integers(0, 100, 32).astype(np.int32)
+    vals = rng.integers(0, 100, 32).astype(np.int32)
+    st, _ = B.apply_updates(st, keys, vals)
+    apply_ref_updates(ref, keys, vals)
+    st, snap = S.snapshot(st)
+    rsnap = ref.snapshot()
+    assert int(snap) == rsnap
+    # overwrite everything after the snapshot
+    st, _ = B.apply_updates(st, keys, (vals + 1000).astype(np.int32))
+    apply_ref_updates(ref, keys, (vals + 1000).astype(np.int32))
+    st, got = B.range_query_all(st, 0, 99, int(snap), max_scan_leaves=4,
+                                max_results=16)
+    assert got == ref.range_query(0, 99, rsnap)   # sees pre-overwrite values
+    st, got_now = B.range_query_all(st, 0, 99, None)
+    assert got_now == ref.range_query(0, 99, ref.ts)
+
+
+def test_range_pagination_truncation():
+    st, ref = fresh()
+    keys = np.arange(0, 200, dtype=np.int32)
+    vals = keys * 2
+    for i in range(0, 200, 8):
+        st, _ = B.apply_updates(st, keys[i:i+8], vals[i:i+8])
+        apply_ref_updates(ref, keys[i:i+8], vals[i:i+8])
+    st, got = B.range_query_all(st, 5, 180, None, max_scan_leaves=2,
+                                max_results=8)
+    assert got == ref.range_query(5, 180, ref.ts)
+
+
+def test_compact_preserves_snapshots_and_gc():
+    rng = np.random.default_rng(3)
+    st, ref = fresh()
+    keys = rng.integers(0, 50, 32).astype(np.int32)
+    vals = rng.integers(0, 100, 32).astype(np.int32)
+    st, _ = B.apply_updates(st, keys, vals)
+    apply_ref_updates(ref, keys, vals)
+    st, snap = S.snapshot(st)
+    rsnap = ref.snapshot()
+    want_old = ref.range_query(0, 60, rsnap)
+    st, _ = B.apply_updates(st, keys, (vals + 7).astype(np.int32))
+    apply_ref_updates(ref, keys, (vals + 7).astype(np.int32))
+
+    vers_before = int(st.n_vers)
+    st, _ = S.compact(st)          # snapshot active: old versions retained
+    S.check_invariants(st)
+    st, got = B.range_query_all(st, 0, 60, int(snap))
+    assert got == want_old
+    st = S.release(st, snap)
+    ref.release(rsnap)
+    st, _ = S.compact(st)          # now reclaim
+    S.check_invariants(st)
+    assert int(st.n_vers) < vers_before
+    assert S.live_items(st) == ref.live_items()
+
+
+def test_slow_path_on_leaf_concentration():
+    """> leaf_cap new keys into one leaf must abort + retry in rounds."""
+    st, ref = fresh()
+    keys = np.arange(100, 132, dtype=np.int32)   # 32 new keys, 1 leaf, L=8
+    vals = keys.copy()
+    st2, _, ok = S.bulk_update(st, jnp.asarray(keys), jnp.asarray(vals))
+    assert not bool(ok)
+    assert int(st2.oflow) & S.OFLOW_LEAFBATCH
+    # combining layer resolves it
+    st, prev = B.apply_updates(st, keys, vals)
+    apply_ref_updates(ref, keys, vals)
+    assert S.live_items(st) == ref.live_items()
+    S.check_invariants(st)
+
+
+def test_capacity_error_when_full():
+    tiny = S.UruvConfig(leaf_cap=4, max_leaves=8, max_versions=64,
+                        max_chain=8)
+    st = S.create(tiny)
+    keys = np.arange(0, 64, dtype=np.int32)
+    with pytest.raises(B.CapacityError):
+        for i in range(0, 64, 8):
+            st, _ = B.apply_updates(st, keys[i:i+8], keys[i:i+8])
+
+
+def test_version_tracker_min_active():
+    st, _ = fresh()
+    st, s1 = S.snapshot(st)
+    st, _ = B.apply_updates(st, np.array([1], np.int32),
+                            np.array([1], np.int32))
+    st, s2 = S.snapshot(st)
+    assert int(S.min_active_ts(st)) == int(s1)
+    st = S.release(st, s1)
+    assert int(S.min_active_ts(st)) == int(s2)
+    st = S.release(st, s2)
+    assert int(S.min_active_ts(st)) == int(st.ts)
+
+
+def test_paper_leaf_protocol_fields():
+    """Split marks the old leaf frozen and forwards via newNext (paper 3.1)."""
+    st, _ = fresh()
+    keys = np.arange(0, 9, dtype=np.int32)       # overflows L=8 -> split
+    st, _ = B.apply_updates(st, keys[:8], keys[:8])
+    assert int(st.n_leaves) == 1
+    old_leaf = int(st.dir_leaf[0])
+    st, _ = B.apply_updates(st, keys[8:], keys[8:])
+    assert int(st.n_leaves) == 2
+    assert bool(st.leaf_frozen[old_leaf])
+    fwd = int(st.leaf_newnext[old_leaf])
+    assert fwd == int(st.dir_leaf[0])            # newNext -> replacement left
+    # leaf chain matches directory order and timestamps were stamped
+    S.check_invariants(st)
+    assert int(st.leaf_ts[fwd]) > 0
