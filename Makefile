@@ -1,0 +1,13 @@
+.PHONY: check test bench-kernels bench-mixed
+
+check:
+	bash scripts/check.sh
+
+test:
+	PYTHONPATH=src python -m pytest -x -q
+
+bench-kernels:
+	PYTHONPATH=src python -m benchmarks.run --quick --only kernels
+
+bench-mixed:
+	PYTHONPATH=src python -m benchmarks.run --quick --only mixed

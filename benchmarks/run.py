@@ -11,6 +11,9 @@ workloads; see each section).  Figures:
   * table_complexity — measured wait-free bound: passes per op vs
                  conflict concentration (the paper's m = f(I_C) bound).
   * kernels    — Uruv hot-path kernels, XLA path (CPU relative numbers).
+  * mixed      — the fused one-pass ``bulk_apply`` vs the pre-fusion
+                 two-pass path (update pass + host sync + lookup pass)
+                 on a mixed announce array; writes BENCH_mixed.json.
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick]
 """
@@ -18,7 +21,8 @@ Run: PYTHONPATH=src python -m benchmarks.run [--quick]
 from __future__ import annotations
 
 import argparse
-import sys
+import json
+from pathlib import Path
 
 import numpy as np
 import jax.numpy as jnp
@@ -26,6 +30,9 @@ import jax.numpy as jnp
 from benchmarks import workloads as W
 from repro.core import batch as B
 from repro.core import store as S
+from repro.core.ref import (
+    KEY_MAX, NOT_FOUND, TOMBSTONE, OP_DELETE, OP_INSERT, OP_SEARCH,
+)
 
 WIDTHS = [64, 256, 1024, 4096]
 
@@ -86,17 +93,17 @@ def table_complexity() -> None:
         new = (rng.choice(span // 2, 1024, replace=False)
                .astype(np.int32) * 2 + 1)      # odd keys: all new
         calls = {"n": 0}
-        orig = S.bulk_update
+        orig = S.bulk_apply
 
-        def counting(st_, k, v):
+        def counting(*a, **kw):
             calls["n"] += 1
-            return orig(st_, k, v)
+            return orig(*a, **kw)
 
-        S.bulk_update = counting
+        S.bulk_apply = counting
         try:
             st, _ = B.apply_updates(st, new, new)
         finally:
-            S.bulk_update = orig
+            S.bulk_apply = orig
         emit(f"complexity_span{span}_passes", float(calls["n"]),
              f"{calls['n']}rounds")
 
@@ -115,6 +122,103 @@ def kernels(quick: bool = False) -> None:
         st, 100_000, 101_000, ts, max_scan_leaves=64,
         max_results=2048)[0].block_until_ready())
     emit("kernel_range1k_snapshot", sec * 1e6, "1scan")
+
+
+MIXED_CFG = S.UruvConfig(leaf_cap=64, max_leaves=1 << 13,
+                         max_versions=1 << 19, max_chain=64)
+MIXED_RESIDENT = 200_000
+
+
+def _two_pass_apply(st, codes, keys, vals):
+    """The pre-bulk_apply execution path (seed `batch.apply_batch`): one
+    device pass for INSERT/DELETE, a host sync, a second device pass for
+    SEARCH at per-op snapshots, host-side result assembly.  The update pass
+    runs with ``light_path=False`` — the seed rebuilt the structure
+    unconditionally (validated against the actual seed checkout)."""
+    n = len(codes)
+    base = int(st.ts)
+    upd_mask = (codes == OP_INSERT) | (codes == OP_DELETE)
+    ukeys = np.where(upd_mask, keys, KEY_MAX).astype(np.int32)
+    uvals = np.where(codes == OP_DELETE, TOMBSTONE, vals).astype(np.int32)
+    st, prev, ok = S.bulk_update(st, jnp.asarray(ukeys), jnp.asarray(uvals),
+                                 light_path=False)
+    assert bool(ok), "baseline update pass rejected; resize MIXED_CFG"
+    results = np.full(n, NOT_FOUND, np.int64)
+    results[upd_mask] = np.asarray(prev)[upd_mask]
+    smask = codes == OP_SEARCH
+    skeys = np.where(smask, keys, KEY_MAX).astype(np.int32)
+    snaps = (base + np.arange(n)).astype(np.int32)
+    sv = S.bulk_lookup(st, jnp.asarray(skeys), jnp.asarray(snaps))
+    results[smask] = np.asarray(sv)[smask]
+    return st, results
+
+
+def mixed(quick: bool = False, out_path: str = "BENCH_mixed.json") -> None:
+    """Fused mixed-op pass vs the old two-pass path (DESIGN.md Sec 3).
+
+    Workload: 90% SEARCH / 5% INSERT / 5% DELETE over a resident working
+    set (updates overwrite live keys — the serving-table traffic pattern).
+    Both paths produce bit-identical announce-order results; the fused path
+    is ONE device call per batch."""
+    rng = np.random.default_rng(5)
+    st0 = S.create(MIXED_CFG)
+    resident = rng.choice(W.UNIVERSE, MIXED_RESIDENT,
+                          replace=False).astype(np.int32)
+    for i in range(0, MIXED_RESIDENT, 4096):
+        st0, _ = B.apply_updates(st0, resident[i:i+4096],
+                                 resident[i:i+4096] % 1000 + 1)
+    widths = [1024] if quick else [1024, 4096]
+    report = {}
+    for width in widths:
+        batches = []
+        for _ in range(4):
+            r = rng.random(width)
+            codes = np.where(
+                r < 0.90, OP_SEARCH,
+                np.where(r < 0.95, OP_INSERT, OP_DELETE),
+            ).astype(np.int32)
+            keys = resident[rng.integers(0, MIXED_RESIDENT, width)] \
+                .astype(np.int32)
+            vals = (keys % 1000 + 1).astype(np.int32)
+            batches.append((codes, keys, vals))
+
+        # the two paths must agree before we time them
+        _, res_f, ok_f = S.bulk_apply(st0, *batches[0])
+        _, res_t = _two_pass_apply(st0, *batches[0])
+        assert bool(ok_f) and np.asarray(res_f).tolist() == res_t.tolist(), \
+            "fused and two-pass paths disagree"
+
+        hold_f = {"st": st0}
+
+        def run_fused():
+            st = hold_f["st"]
+            for c, k, v in batches:
+                st, res, _ = S.bulk_apply(st, c, k, v)
+                np.asarray(res)
+            hold_f["st"] = st
+
+        fsec = W.timed(run_fused) / len(batches)
+
+        hold_t = {"st": st0}
+
+        def run_two_pass():
+            st = hold_t["st"]
+            for c, k, v in batches:
+                st, _ = _two_pass_apply(st, c, k, v)
+            hold_t["st"] = st
+
+        tsec = W.timed(run_two_pass) / len(batches)
+        emit(f"mixed_fused_w{width}", fsec * 1e6,
+             f"{width/fsec/1e6:.3f}Mops/s")
+        emit(f"mixed_two_pass_w{width}", tsec * 1e6,
+             f"{width/tsec/1e6:.3f}Mops/s")
+        emit(f"mixed_speedup_w{width}", tsec / fsec, f"{tsec/fsec:.2f}x")
+        report[f"w{width}"] = {
+            "fused_us": round(fsec * 1e6, 1),
+            "two_pass_us": round(tsec * 1e6, 1),
+            "speedup": round(tsec / fsec, 2),
+        }
+    Path(out_path).write_text(json.dumps(report, indent=2) + "\n")
 
 
 def roofline_summary() -> None:
@@ -145,7 +249,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="fig8|fig9|complexity|kernels|roofline")
+                    help="fig8|fig9|complexity|kernels|mixed|roofline")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     sections = {
@@ -153,6 +257,7 @@ def main() -> None:
         "fig9": lambda: fig9(args.quick),
         "complexity": table_complexity,
         "kernels": lambda: kernels(args.quick),
+        "mixed": lambda: mixed(args.quick),
         "roofline": roofline_summary,
     }
     if args.only:

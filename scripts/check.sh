@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Tier-1 gate + perf trajectory.  Run from the repo root:  bash scripts/check.sh
+# (or `make check`).  Writes BENCH_mixed.json so the fused-pass speedup
+# accumulates across PRs.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== kernel microbench (quick) =="
+python -m benchmarks.run --quick --only kernels
+
+echo "== fused mixed-op pass vs two-pass (quick; writes BENCH_mixed.json) =="
+python -m benchmarks.run --quick --only mixed
+
+echo "== BENCH_mixed.json =="
+cat BENCH_mixed.json

@@ -1,0 +1,137 @@
+"""Backend dispatch for the Uruv hot-path primitives (DESIGN.md Sec 7).
+
+The store's two inner loops — ``locate`` (directory descent + in-leaf rank)
+and ``resolve`` (versioned chain read) — have three interchangeable
+implementations with one contract:
+
+  * ``xla``              — pure-jnp formulation (``searchsorted`` descent,
+    ``while_loop`` chain walk).  Lowers on every backend; the portable
+    default off-TPU.
+  * ``pallas``           — the compiled Pallas TPU kernels
+    (``repro.kernels.uruv_search`` + ``repro.kernels.versioned_read``).
+    Deployment configuration on real TPUs.
+  * ``pallas_interpret`` — the same kernels under the Pallas interpreter;
+    kernel-coverage testing on CPU containers.
+
+Resolution order: :func:`set_backend` override > ``URUV_BACKEND`` env var >
+auto-detect (TPU -> ``pallas``, anything else -> ``xla``).  The chosen
+backend is threaded as a *static* argument through the store's jitted entry
+points, so switching backends retraces rather than silently reusing a stale
+compilation.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.ref import KEY_MAX, NOT_FOUND, TOMBSTONE
+
+XLA = "xla"
+PALLAS = "pallas"
+PALLAS_INTERPRET = "pallas_interpret"
+BACKENDS = (XLA, PALLAS, PALLAS_INTERPRET)
+
+ENV_VAR = "URUV_BACKEND"
+
+_override: str | None = None
+
+
+def _validate(name: str) -> str:
+    if name not in BACKENDS:
+        raise ValueError(f"unknown Uruv backend {name!r}; expected one of {BACKENDS}")
+    return name
+
+
+def set_backend(name: str | None) -> None:
+    """Process-wide override (None restores env/auto resolution)."""
+    global _override
+    _override = None if name is None else _validate(name)
+
+
+def get_backend() -> str:
+    """Resolve the active backend: override > env > auto-detect."""
+    if _override is not None:
+        return _override
+    env = os.environ.get(ENV_VAR)
+    if env:
+        return _validate(env)
+    return PALLAS if jax.default_backend() == "tpu" else XLA
+
+
+# ---------------------------------------------------------------------------
+# locate: directory rank -> leaf gather -> in-leaf slot (+ vhead gather)
+# ---------------------------------------------------------------------------
+
+def locate(dir_keys, dir_leaf, leaf_keys, leaf_vhead, queries, *, backend: str):
+    """Full traversal: returns (dir_pos, leaf_id, slot, exists, vhead).
+
+    ``vhead`` is -1 where the key is absent.  Trace-time dispatch: call
+    only from functions where ``backend`` is static.
+    """
+    L = leaf_keys.shape[1]
+    if backend == XLA:
+        pos = jnp.searchsorted(dir_keys, queries, side="right").astype(jnp.int32) - 1
+        pos = jnp.maximum(pos, 0)
+        leaf_id = dir_leaf[pos]
+        rows = leaf_keys[leaf_id]                          # [P, L]
+        slot = jnp.sum(rows < queries[:, None], axis=1).astype(jnp.int32)
+        hit = jnp.take_along_axis(
+            rows, jnp.minimum(slot, L - 1)[:, None], axis=1
+        )[:, 0]
+        exists = (slot < L) & (hit == queries)
+    else:
+        from repro.kernels.uruv_search.uruv_search import leaf_slots, search_positions
+
+        interpret = backend == PALLAS_INTERPRET
+        pos = search_positions(dir_keys, queries, interpret=interpret)
+        leaf_id = dir_leaf[pos]
+        rows = leaf_keys[leaf_id]
+        slot, exists = leaf_slots(rows, queries, interpret=interpret)
+    vhead = jnp.where(
+        exists,
+        jnp.take_along_axis(
+            leaf_vhead[leaf_id], jnp.minimum(slot, L - 1)[:, None], axis=1
+        )[:, 0],
+        -1,
+    )
+    return pos, leaf_id, slot, exists, vhead
+
+
+# ---------------------------------------------------------------------------
+# resolve: first version with ts <= snap (the paper's read()/vCAS path)
+# ---------------------------------------------------------------------------
+
+def resolve(vhead, snap_ts, ver_ts, ver_next, ver_value, *, max_chain: int,
+            backend: str):
+    """Versioned read over the chain pool; snap_ts broadcasts to vhead."""
+    snap_ts = jnp.broadcast_to(jnp.asarray(snap_ts, jnp.int32), vhead.shape)
+    if backend != XLA:
+        from repro.kernels.versioned_read.versioned_read import versioned_read
+
+        return versioned_read(
+            vhead, snap_ts, ver_ts, ver_next, ver_value,
+            max_chain=max_chain, interpret=(backend == PALLAS_INTERPRET),
+        )
+
+    def body(state):
+        cur, steps = state
+        ts_cur = jnp.where(cur >= 0, ver_ts[jnp.maximum(cur, 0)], 0)
+        advance = (cur >= 0) & (ts_cur > snap_ts)
+        nxt = jnp.where(advance, ver_next[jnp.maximum(cur, 0)], cur)
+        return nxt, steps + 1
+
+    def cond(state):
+        cur, steps = state
+        ts_cur = jnp.where(cur >= 0, ver_ts[jnp.maximum(cur, 0)], 0)
+        return jnp.any((cur >= 0) & (ts_cur > snap_ts)) & (steps < max_chain)
+
+    cur, _ = lax.while_loop(cond, body, (vhead, jnp.array(0, jnp.int32)))
+    ok = cur >= 0
+    ts_cur = jnp.where(ok, ver_ts[jnp.maximum(cur, 0)], 0)
+    ok = ok & (ts_cur <= snap_ts)
+    val = jnp.where(ok, ver_value[jnp.maximum(cur, 0)], NOT_FOUND)
+    return jnp.where(val == TOMBSTONE, NOT_FOUND, val)

@@ -2,13 +2,16 @@
 
 The paper's fast-path/slow-path (Kogan–Petrank [16], Sec 4) maps to:
 
-  * fast path  — the whole announce array is applied in ONE deterministic
-    data-parallel pass (`store.bulk_update`).  This succeeds unless the batch
-    over-concentrates structural inserts (> L new keys into one leaf) or a
-    pool fills up.
+  * fast path  — the whole *mixed* announce array (SEARCH / INSERT /
+    DELETE / NOP) is applied in ONE deterministic data-parallel pass
+    (`store.bulk_apply`): updates append versions at their per-op
+    timestamps and searches resolve at their per-op snapshots, all in the
+    same device call.  This succeeds unless the batch over-concentrates
+    structural inserts (> L new keys into one leaf) or a pool fills up.
   * slow path  — on rejection the combining layer *helps in rounds*: it
-    halves the announce array (preserving announce order, hence the same
-    linearization) and re-applies; capacity overflows trigger `compact()`
+    halves the announce array and re-applies with the ORIGINAL per-op
+    timestamps (`op_ts` plumbing), so the linearization is bit-identical
+    to the one-pass application; capacity overflows trigger `compact()`
     (the GC the paper performs during split/merge, gated by the version
     tracker).  Recursion terminates: a single op can never violate the
     per-leaf bound, so every op completes in a bounded number of rounds —
@@ -25,11 +28,9 @@ import dataclasses
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.core import store as S
-from repro.core.ref import KEY_MAX, NOT_FOUND, TOMBSTONE, OP_DELETE, OP_INSERT, OP_NOP, OP_SEARCH
 
 
 class CapacityError(RuntimeError):
@@ -43,26 +44,31 @@ def _clear_oflow(store: S.UruvStore) -> S.UruvStore:
     return dataclasses.replace(store, oflow=jnp.zeros_like(store.oflow))
 
 
-def apply_updates(
+def _apply_rounds(
     store: S.UruvStore,
+    codes: np.ndarray,
     keys: np.ndarray,
     values: np.ndarray,
+    op_ts: Optional[np.ndarray],
+    next_ts,
     *,
     _depth: int = 0,
 ) -> Tuple[S.UruvStore, np.ndarray]:
-    """Apply INSERT/DELETE announce array; returns (store, prev_values).
+    """One fast-path attempt + bounded help-rounds on rejection.
 
-    Timestamps follow announce order across all slow-path rounds (round
-    widths sum to the original width, so ts advances exactly as the
-    one-pass application would).
+    ``op_ts is None`` is the common entry: the device pass assigns
+    ``store.ts + i`` itself (zero host syncs on the fast path).  Slow-path
+    recursion materialises the timestamps once and slices them, so every
+    round applies its ops at exactly the timestamps the one-pass
+    application would have used.
     """
     if _depth > MAX_SLOWPATH_ROUNDS:
         raise CapacityError("slow path failed to converge; store too small")
-    keys = np.asarray(keys, np.int32)
-    values = np.asarray(values, np.int32)
-    new_store, prev, ok = S.bulk_update(store, jnp.asarray(keys), jnp.asarray(values))
+    new_store, res, ok = S.bulk_apply(
+        store, codes, keys, values, op_ts=op_ts, next_ts=next_ts
+    )
     if bool(ok):
-        return new_store, np.asarray(prev)
+        return new_store, np.asarray(res)
     reason = int(new_store.oflow) & ~int(store.oflow)
     if reason & (S.OFLOW_VERSIONS | S.OFLOW_LEAVES):
         compacted, _ = S.compact(_clear_oflow(store))
@@ -78,15 +84,42 @@ def apply_updates(
                 f"{store.cfg.max_versions}, "
                 f"leaves={int(store.n_alloc)}/{store.cfg.max_leaves})"
             )
-        return apply_updates(compacted, keys, values, _depth=_depth + 1)
-    # OFLOW_LEAFBATCH: help in rounds — halve the announce array.
+        return _apply_rounds(compacted, codes, keys, values, op_ts, next_ts,
+                             _depth=_depth + 1)
+    # OFLOW_LEAFBATCH: help in rounds — halve the announce array, keeping
+    # the per-op timestamp assignment of the rejected one-pass attempt.
     if len(keys) == 1:
         raise CapacityError("single op rejected; leaf_cap too small")
+    if op_ts is None:
+        base = int(store.ts)
+        op_ts = (base + np.arange(len(keys))).astype(np.int32)
+        if next_ts is None:
+            next_ts = base + len(keys)
     mid = len(keys) // 2
     st = _clear_oflow(store)
-    st, prev_a = apply_updates(st, keys[:mid], values[:mid], _depth=_depth + 1)
-    st, prev_b = apply_updates(st, keys[mid:], values[mid:], _depth=_depth + 1)
-    return st, np.concatenate([prev_a, prev_b])
+    st, res_a = _apply_rounds(st, codes[:mid], keys[:mid], values[:mid],
+                              op_ts[:mid], int(op_ts[mid]), _depth=_depth + 1)
+    st, res_b = _apply_rounds(st, codes[mid:], keys[mid:], values[mid:],
+                              op_ts[mid:], next_ts, _depth=_depth + 1)
+    return st, np.concatenate([res_a, res_b])
+
+
+def apply_updates(
+    store: S.UruvStore,
+    keys: np.ndarray,
+    values: np.ndarray,
+) -> Tuple[S.UruvStore, np.ndarray]:
+    """Apply INSERT/DELETE announce array; returns (store, prev_values).
+
+    DELETE == value TOMBSTONE; padded keys (KEY_MAX) are no-ops.
+    Timestamps follow announce order across all slow-path rounds (round
+    widths sum to the original width, so ts advances exactly as the
+    one-pass application would).
+    """
+    keys = np.asarray(keys, np.int32)
+    values = np.asarray(values, np.int32)
+    codes = np.asarray(S.derive_update_codes(keys, values))
+    return _apply_rounds(store, codes, keys, values, None, None)
 
 
 def apply_batch(
@@ -94,28 +127,16 @@ def apply_batch(
 ) -> Tuple[S.UruvStore, List[int]]:
     """Mixed announce array of (op, key, value) — the full ADT, linearized
     in announce order (op i at ts base+i), matching RefStore.apply_batch.
+
+    Fast path: exactly one device pass (`store.bulk_apply`) for the whole
+    array — searches and updates complete together, no host sync between
+    them (DESIGN.md Sec 3).
     """
-    n = len(ops)
     codes = np.array([o[0] for o in ops], np.int32)
     keys = np.array([o[1] for o in ops], np.int32)
     vals = np.array([o[2] for o in ops], np.int32)
-    base = int(store.ts)
-
-    upd_mask = (codes == OP_INSERT) | (codes == OP_DELETE)
-    ukeys = np.where(upd_mask, keys, KEY_MAX).astype(np.int32)
-    uvals = np.where(codes == OP_DELETE, TOMBSTONE, vals).astype(np.int32)
-    store, prev = apply_updates(store, ukeys, uvals)
-
-    results = np.full(n, NOT_FOUND, np.int64)
-    results[upd_mask] = prev[upd_mask]
-
-    search_mask = codes == OP_SEARCH
-    if search_mask.any():
-        skeys = np.where(search_mask, keys, KEY_MAX).astype(np.int32)
-        snaps = (base + np.arange(n)).astype(np.int32)
-        svals = S.bulk_lookup(store, jnp.asarray(skeys), jnp.asarray(snaps))
-        results[search_mask] = np.asarray(svals)[search_mask]
-    return store, results.tolist()
+    store, res = _apply_rounds(store, codes, keys, vals, None, None)
+    return store, res.astype(np.int64).tolist()
 
 
 def range_query_all(

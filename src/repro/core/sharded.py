@@ -4,30 +4,36 @@ Scaling the paper's store across chips: the key space is range-partitioned;
 every device owns one UruvStore shard (all store arrays carry a leading
 device axis, sharded over ``axis_name``).  Bulk ADT calls are SPMD programs:
 
-  update:  all_gather the announce array -> each shard filters + applies its
-           own keys locally (one bounded pass, same wait-free argument).
+  apply :  ONE mixed-op device pass per shard (`store.bulk_apply`).  Op i of
+           the global announce array runs at global timestamp ``base + i``
+           on whichever shard owns its key (the per-op timestamp plumbing of
+           DESIGN.md Sec 3), so the sharded linearization is bit-identical
+           to the single-device one.  Two distributions:
+             * replicated (``make_apply``)        — every shard scans the full
+               announce array and NOPs the ops it does not own (the
+               paper-faithful "every thread reads the whole stateArray";
+               collective bytes O(G * devices)).
+             * routed     (``make_routed_apply``) — the announce array arrives
+               *sharded*; an all_to_all ships each op to its owner, which
+               applies its subset at the ops' original global timestamps.
+               Collective bytes O(G * route_factor).  Capacity overflow
+               (a shard owed more than its routing budget) returns ok=False;
+               the host falls back to the replicated pass.
+  update:  thin wrapper deriving INSERT/DELETE codes (legacy API).
   lookup:  all_gather -> owner answers -> psum-combine (one-hot by ownership).
   range :  every shard scans its local intersection of [k1,k2]; results are
            all_gather'ed and host-merged.
 
 The global clock stays consistent without communication: every shard
-advances its local ts by the (identical) announce width per batch, so
-timestamps agree deterministically across shards — the FAA of the paper
-becomes a replicated counter.
-
-The replicated announce distribution is the paper-faithful design ("every
-thread reads the whole stateArray"): each shard scans the full announce
-array and applies its own keys.  A ragged all_to_all routing variant
-(collective bytes O(G) instead of O(G·devices)) is the documented next
-step in EXPERIMENTS.md §Perf; it requires per-op timestamp plumbing through
-``bulk_update`` to preserve announce-order linearization.
+advances its local ts to ``base + G`` per batch regardless of how many ops
+it owns, so timestamps agree deterministically across shards — the FAA of
+the paper becomes a replicated counter.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional, Tuple
 
 import numpy as np
 import jax
@@ -35,8 +41,9 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import store as S
-from repro.core.ref import KEY_MAX, NOT_FOUND
+from repro.core.ref import KEY_MAX, NOT_FOUND, OP_NOP
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,30 +75,191 @@ def _owner(cfg: ShardedConfig, keys: jax.Array, n_shards: int) -> jax.Array:
     return jnp.clip((keys - cfg.key_lo) // span, 0, n_shards - 1).astype(jnp.int32)
 
 
+def _mixed_core(cfg: ShardedConfig, n_shards: int, st, codes, keys, values):
+    """Shared SPMD body: apply the replicated mixed announce on one shard.
+
+    Ops not owned by this shard become NOPs; per-op global timestamps keep
+    the announce-order linearization exact across shards.
+    """
+    ax = cfg.axis_name
+    i32 = jnp.int32
+    G = keys.shape[0]
+    me = lax.axis_index(ax)
+    mine = (_owner(cfg, keys, n_shards) == me) & (keys < KEY_MAX)
+    lcodes = jnp.where(mine, codes, OP_NOP)
+    lkeys = jnp.where(mine, keys, KEY_MAX)
+    base = st.ts
+    new_store, res, ok = S.bulk_apply(
+        st, lcodes, lkeys, values,
+        op_ts=base + jnp.arange(G, dtype=i32),
+        next_ts=base + jnp.asarray(G, i32),
+    )
+    res_all = lax.psum(jnp.where(mine, res - NOT_FOUND, 0), ax) + NOT_FOUND
+    ok_all = lax.psum(jnp.where(ok, 0, 1), ax) == 0
+    return new_store, res_all, ok_all
+
+
+def make_apply(cfg: ShardedConfig, mesh: Mesh):
+    """Jitted SPMD mixed-op pass over a *replicated* announce array.
+
+    (store, op_codes[G], keys[G], values[G]) -> (store, results[G], ok).
+
+    On ok=False the returned store is cross-shard INCONSISTENT (shards that
+    individually succeeded applied their ops and advanced their clocks;
+    the rejecting shard did not) — callers MUST discard it and retry from
+    the input store, e.g. via :func:`sharded_apply_batch`.  The same
+    contract applies to the ``update`` op of :func:`make_ops`.
+    """
+    ax = cfg.axis_name
+    n_shards = mesh.shape[ax]
+
+    def _apply_block(st_blk, codes, keys, values):
+        st = jax.tree.map(lambda x: x[0], st_blk)
+        new_store, res_all, ok = _mixed_core(cfg, n_shards, st, codes, keys, values)
+        return jax.tree.map(lambda x: x[None], new_store), res_all, ok
+
+    return jax.jit(
+        shard_map(
+            _apply_block,
+            mesh=mesh,
+            in_specs=(P(ax), P(None), P(None), P(None)),
+            out_specs=(P(ax), P(), P()),
+        )
+    )
+
+
+def make_routed_apply(cfg: ShardedConfig, mesh: Mesh, *, route_factor: int = 2):
+    """Jitted SPMD mixed-op pass over a *sharded* announce array.
+
+    The announce arrays arrive partitioned over ``axis_name`` (global width
+    G must be a multiple of the shard count; see :func:`pad_announce`).
+    Each shard packs its slice's ops by owner into a [n_shards, cap] staging
+    buffer (cap = ceil(W * route_factor / n_shards)) and an all_to_all ships
+    them; owners apply their routed subset with ``op_ts = base + global
+    announce position`` — the timestamp plumbing that makes the routed
+    linearization identical to the replicated one.  If any shard receives
+    more ops than its budget, the pass returns ok=False with the input
+    store's ops only partially applied — callers MUST discard the returned
+    store on ok=False and retry via the replicated pass (functional updates
+    make that free).
+    """
+    ax = cfg.axis_name
+    n_shards = mesh.shape[ax]
+
+    def _routed_block(st_blk, codes, keys, values):
+        st = jax.tree.map(lambda x: x[0], st_blk)
+        i32 = jnp.int32
+        W = keys.shape[0]                    # local announce slice
+        G = W * n_shards
+        cap = max(1, -(-(W * route_factor) // n_shards))
+        me = lax.axis_index(ax)
+        pos = me * W + jnp.arange(W, dtype=i32)   # global announce positions
+
+        route = (keys < KEY_MAX) & (codes != OP_NOP)
+        owner = jnp.where(route, _owner(cfg, keys, n_shards), n_shards)
+        onehot = (owner[:, None] == jnp.arange(n_shards, dtype=i32)[None, :])
+        rank = jnp.take_along_axis(
+            jnp.cumsum(onehot.astype(i32), axis=0),
+            jnp.minimum(owner, n_shards - 1)[:, None], axis=1,
+        )[:, 0] - 1
+        lost = jnp.any((owner < n_shards) & (rank >= cap))
+        row = jnp.where((owner < n_shards) & (rank < cap), owner, n_shards)
+        col = jnp.minimum(rank, cap - 1)
+        stage = lambda fill, x: jnp.full((n_shards, cap), fill, i32).at[
+            row, col].set(x, mode="drop")
+        send = (stage(OP_NOP, codes), stage(KEY_MAX, keys),
+                stage(0, values), stage(0, pos))
+        rcodes, rkeys, rvals, rpos = (
+            lax.all_to_all(x, ax, split_axis=0, concat_axis=0) for x in send
+        )
+        # flatten: row s came from source shard s, whose positions are
+        # [s*W, (s+1)*W) packed in order -> valid ops stay globally
+        # announce-ordered, which bulk_apply's op_ts contract requires.
+        flat_codes = rcodes.reshape(-1)
+        flat_keys = rkeys.reshape(-1)
+        flat_pos = rpos.reshape(-1)
+        base = st.ts
+        new_store, res, ok = S.bulk_apply(
+            st, flat_codes, flat_keys, rvals.reshape(-1),
+            op_ts=base + flat_pos,
+            next_ts=base + jnp.asarray(G, i32),
+        )
+        contrib = jnp.zeros((G,), i32).at[flat_pos].add(
+            jnp.where(flat_keys < KEY_MAX, res - NOT_FOUND, 0)
+        )
+        res_all = lax.psum(contrib, ax) + NOT_FOUND
+        ok_all = lax.psum(jnp.where(ok & ~lost, 0, 1), ax) == 0
+        return jax.tree.map(lambda x: x[None], new_store), res_all, ok_all
+
+    return jax.jit(
+        shard_map(
+            _routed_block,
+            mesh=mesh,
+            in_specs=(P(ax), P(ax), P(ax), P(ax)),
+            out_specs=(P(ax), P(), P()),
+        )
+    )
+
+
+def pad_announce(codes, keys, values, multiple: int):
+    """Pad a host announce array with NOPs to a width multiple (routing)."""
+    codes = np.asarray(codes, np.int32)
+    keys = np.asarray(keys, np.int32)
+    values = np.asarray(values, np.int32)
+    r = (-len(keys)) % multiple
+    if r:
+        codes = np.concatenate([codes, np.full(r, OP_NOP, np.int32)])
+        keys = np.concatenate([keys, np.full(r, KEY_MAX, np.int32)])
+        values = np.concatenate([values, np.zeros(r, np.int32)])
+    return codes, keys, values
+
+
+def sharded_apply_batch(store, codes, keys, values, *, apply_fn,
+                        routed_fn=None):
+    """Host fast/slow sequencing: routed pass first, replicated fallback.
+
+    Returns (store, results[G]).  Raises RuntimeError if even the
+    replicated pass rejects (capacity; compact + retry is the caller's
+    policy, mirroring repro.core.batch).
+    """
+    if routed_fn is not None:
+        new_store, res, ok = routed_fn(
+            store, jnp.asarray(codes), jnp.asarray(keys), jnp.asarray(values)
+        )
+        if bool(ok):
+            return new_store, np.asarray(res)
+        # routing budget exceeded: discard the partial store, fall back
+    new_store, res, ok = apply_fn(
+        store, jnp.asarray(codes), jnp.asarray(keys), jnp.asarray(values)
+    )
+    if not bool(ok):
+        raise RuntimeError(
+            "sharded announce rejected by every shard path (capacity); "
+            "compact or widen the shard stores"
+        )
+    return new_store, np.asarray(res)
+
+
 def make_ops(cfg: ShardedConfig, mesh: Mesh):
-    """Build jitted SPMD (update, lookup, range) ops for a given mesh."""
+    """Build jitted SPMD (update, lookup, range) ops for a given mesh.
+
+    ``update`` shares :func:`make_apply`'s rejection contract: on ok=False
+    the returned store is cross-shard inconsistent and must be discarded
+    (retry from the input store; functional updates make that free).
+    """
     ax = cfg.axis_name
     n_shards = mesh.shape[ax]
     store_specs = P(ax)
 
-    def _local_update(store, keys, values):
-        me = lax.axis_index(ax)
-        mine = _owner(cfg, keys, n_shards) == me
-        k = jnp.where(mine & (keys < KEY_MAX), keys, KEY_MAX)
-        v = jnp.where(mine, values, 0)
-        new_store, prev, ok = S.bulk_update(store, k, v)
-        # combine per-op results: owner contributes, others contribute 0
-        prev_all = lax.psum(jnp.where(mine, prev - NOT_FOUND, 0), ax) + NOT_FOUND
-        return new_store, prev_all, lax.psum(jnp.where(ok, 0, 1), ax) == 0
-
     # Each shard's block carries a leading [1] axis under shard_map.
     def _upd_block(st_blk, keys, values):
         st = jax.tree.map(lambda x: x[0], st_blk)
-        new_store, prev_all, ok = _local_update(st, keys, values)
+        codes = S.derive_update_codes(keys, values)
+        new_store, prev_all, ok = _mixed_core(cfg, n_shards, st, codes, keys, values)
         return jax.tree.map(lambda x: x[None], new_store), prev_all, ok
 
     update = jax.jit(
-        jax.shard_map(
+        shard_map(
             _upd_block,
             mesh=mesh,
             in_specs=(store_specs, P(None), P(None)),
@@ -108,7 +276,7 @@ def make_ops(cfg: ShardedConfig, mesh: Mesh):
         return lax.psum(jnp.where(mine, vals - NOT_FOUND, 0), ax) + NOT_FOUND
 
     lookup = jax.jit(
-        jax.shard_map(
+        shard_map(
             _lkp_block,
             mesh=mesh,
             in_specs=(store_specs, P(None), P()),
@@ -126,7 +294,7 @@ def make_ops(cfg: ShardedConfig, mesh: Mesh):
 
     @functools.partial(jax.jit, static_argnames=("max_scan_leaves", "max_results"))
     def range_q(store, k1, k2, snap, *, max_scan_leaves=64, max_results=1024):
-        f = jax.shard_map(
+        f = shard_map(
             functools.partial(
                 _rq_block,
                 max_scan_leaves=max_scan_leaves,

@@ -43,7 +43,10 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.ref import KEY_MAX, NOT_FOUND, TOMBSTONE
+from repro.core import backend as _B
+from repro.core.ref import (
+    KEY_MAX, NOT_FOUND, TOMBSTONE, OP_DELETE, OP_INSERT, OP_NOP, OP_SEARCH,
+)
 
 KEY_MIN = -(2**31)  # directory sentinel for the left-most separator
 
@@ -135,146 +138,173 @@ def create(cfg: UruvConfig = UruvConfig()) -> UruvStore:
 
 # ---------------------------------------------------------------------------
 # Locate: directory descent + in-leaf position (the traversal of Fig. 1).
-# The Pallas kernel repro.kernels.uruv_search implements the same contract.
+# Dispatched through repro.core.backend: the Pallas kernels
+# (repro.kernels.uruv_search / versioned_read) and the XLA oracle share one
+# contract; ``backend`` must be static at every call site.
 # ---------------------------------------------------------------------------
 
-def _locate(store: UruvStore, keys: jax.Array):
+def _locate(store: UruvStore, keys: jax.Array, backend: str = _B.XLA):
     """Vectorized root->leaf traversal.
 
     Returns (dir_pos, leaf_id, slot, exists, vhead) per query key.
     """
-    pos = jnp.searchsorted(store.dir_keys, keys, side="right").astype(jnp.int32) - 1
-    pos = jnp.maximum(pos, 0)
-    leaf_id = store.dir_leaf[pos]
-    rows = store.leaf_keys[leaf_id]                      # [P, L]
-    slot = jnp.sum(rows < keys[:, None], axis=1).astype(jnp.int32)
-    in_range = slot < store.cfg.leaf_cap
-    hit = jnp.take_along_axis(rows, jnp.minimum(slot, store.cfg.leaf_cap - 1)[:, None], axis=1)[:, 0]
-    exists = in_range & (hit == keys)
-    vhead = jnp.where(
-        exists,
-        jnp.take_along_axis(
-            store.leaf_vhead[leaf_id],
-            jnp.minimum(slot, store.cfg.leaf_cap - 1)[:, None],
-            axis=1,
-        )[:, 0],
-        -1,
+    return _B.locate(
+        store.dir_keys, store.dir_leaf, store.leaf_keys, store.leaf_vhead,
+        keys, backend=backend,
     )
-    return pos, leaf_id, slot, exists, vhead
 
 
-def _resolve(store: UruvStore, vhead: jax.Array, snap_ts: jax.Array) -> jax.Array:
+def _resolve(
+    store: UruvStore, vhead: jax.Array, snap_ts: jax.Array,
+    backend: str = _B.XLA,
+) -> jax.Array:
     """Versioned read: first version with ts <= snap (paper's read()/vCAS path).
 
     Bounded chain walk (cfg.max_chain); the Pallas kernel
     repro.kernels.versioned_read mirrors this contract.
     """
-    def body(state):
-        cur, steps = state
-        ts_cur = jnp.where(cur >= 0, store.ver_ts[jnp.maximum(cur, 0)], 0)
-        advance = (cur >= 0) & (ts_cur > snap_ts)
-        nxt = jnp.where(advance, store.ver_next[jnp.maximum(cur, 0)], cur)
-        return nxt, steps + 1
-
-    def cond(state):
-        cur, steps = state
-        ts_cur = jnp.where(cur >= 0, store.ver_ts[jnp.maximum(cur, 0)], 0)
-        return jnp.any((cur >= 0) & (ts_cur > snap_ts)) & (steps < store.cfg.max_chain)
-
-    cur, _ = lax.while_loop(cond, body, (vhead, jnp.array(0, jnp.int32)))
-    ok = cur >= 0
-    ts_cur = jnp.where(ok, store.ver_ts[jnp.maximum(cur, 0)], 0)
-    ok = ok & (ts_cur <= snap_ts)
-    val = jnp.where(ok, store.ver_value[jnp.maximum(cur, 0)], NOT_FOUND)
-    return jnp.where(val == TOMBSTONE, NOT_FOUND, val)
+    return _B.resolve(
+        vhead, snap_ts, store.ver_ts, store.ver_next, store.ver_value,
+        max_chain=store.cfg.max_chain, backend=backend,
+    )
 
 
 # ---------------------------------------------------------------------------
 # SEARCH (batched)
 # ---------------------------------------------------------------------------
 
-@jax.jit
-def bulk_lookup(store: UruvStore, keys: jax.Array, snap_ts: jax.Array) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _bulk_lookup(store, keys, snap_ts, *, backend):
+    snap_ts = jnp.broadcast_to(jnp.asarray(snap_ts, jnp.int32), keys.shape)
+    _, _, _, exists, vhead = _locate(store, keys, backend)
+    vals = _resolve(store, jnp.where(exists, vhead, -1), snap_ts, backend)
+    return jnp.where(keys >= KEY_MAX, NOT_FOUND, vals)
+
+
+def bulk_lookup(
+    store: UruvStore, keys: jax.Array, snap_ts: jax.Array,
+    *, backend: str | None = None,
+) -> jax.Array:
     """Batched SEARCH at per-op snapshot timestamps.
 
     ``snap_ts`` may be scalar or [P].  Padded (KEY_MAX) keys return NOT_FOUND.
     Read-only: does not advance the clock (the combining layer assigns op
-    timestamps; see repro.core.batch).
+    timestamps; see repro.core.batch).  Thin wrapper over the shared
+    locate/resolve primitives of :func:`bulk_apply` (DESIGN.md Sec 3).
     """
-    snap_ts = jnp.broadcast_to(jnp.asarray(snap_ts, jnp.int32), keys.shape)
-    _, _, _, exists, vhead = _locate(store, keys)
-    vals = _resolve(store, jnp.where(exists, vhead, -1), snap_ts)
-    return jnp.where(keys >= KEY_MAX, NOT_FOUND, vals)
+    return _bulk_lookup(store, keys, snap_ts,
+                        backend=backend or _B.get_backend())
 
 
 # ---------------------------------------------------------------------------
-# INSERT / DELETE (batched, atomic, proactive restructuring)
+# bulk_apply — ONE device pass over a mixed announce array (the tentpole of
+# DESIGN.md Sec 3).  SEARCH / INSERT / DELETE / NOP complete together: op i
+# runs at timestamp op_ts[i] (default base_ts + i), updates append versions
+# stamped with their op timestamp, and searches resolve at their own
+# per-op snapshot — the batch analogue of the paper's single announce-array
+# scan (Kogan-Petrank helping).
 # ---------------------------------------------------------------------------
 
-@jax.jit
-def bulk_update(
-    store: UruvStore, keys: jax.Array, values: jax.Array
-) -> Tuple[UruvStore, jax.Array, jax.Array]:
-    """Apply a batch of INSERT/DELETE ops (DELETE == value TOMBSTONE).
-
-    Linearization: op i gets timestamp ``store.ts + i`` (announce order).
-    Returns (new_store, prev_values[P], ok).  ``ok=False`` means the batch
-    was rejected atomically (capacity/conflict overflow) and must be retried
-    via the slow path (repro.core.batch splits it).  Padded keys (KEY_MAX)
-    are no-ops.
-    """
+def _bulk_apply_impl(store, op_codes, keys, values, base_ts, op_ts, next_ts,
+                     backend, light_path=True):
     cfg = store.cfg
     P = keys.shape[0]
     L, ML, MV = cfg.leaf_cap, cfg.max_leaves, cfg.max_versions
     i32 = jnp.int32
-    base_ts = store.ts
+    if base_ts is None:
+        base_ts = store.ts
+    base_ts = jnp.asarray(base_ts, i32)
+    if op_ts is None:
+        op_ts = base_ts + jnp.arange(P, dtype=i32)
+    op_ts = jnp.asarray(op_ts, i32)
+    if next_ts is None:
+        next_ts = base_ts + P
+    next_ts = jnp.asarray(next_ts, i32)
     announce = jnp.arange(P, dtype=i32)
-    valid = keys < KEY_MAX
+
+    is_upd = (op_codes == OP_INSERT) | (op_codes == OP_DELETE)
+    is_search = op_codes == OP_SEARCH
+    valid_key = keys < KEY_MAX
+    adt_keys = jnp.where((is_upd | is_search) & valid_key, keys, KEY_MAX)
+    upd_vals = jnp.where(op_codes == OP_DELETE, TOMBSTONE, values).astype(i32)
 
     # ---- sort by (key, announce idx): groups duplicates, keeps LP order ----
-    skeys, sidx, svals = lax.sort((keys, announce, values), num_keys=2)
+    # Searches ride in the SAME sort as updates: the whole batch shares one
+    # directory descent + leaf gather, and each search reads its in-batch
+    # predecessor directly (no post-apply second locate) — the fused pass.
+    skeys, sidx, svals, scodes = lax.sort(
+        (adt_keys, announce, upd_vals, op_codes), num_keys=2
+    )
     svalid = skeys < KEY_MAX
+    upd_s = svalid & ((scodes == OP_INSERT) | (scodes == OP_DELETE))
+    search_s = svalid & (scodes == OP_SEARCH)
+    sop_ts = op_ts[sidx]       # per-op timestamps (announce-order monotone)
     first_occ = jnp.concatenate([jnp.ones((1,), bool), skeys[1:] != skeys[:-1]])
-    last_occ = jnp.concatenate([skeys[1:] != skeys[:-1], jnp.ones((1,), bool)])
     first_occ &= svalid
-    last_occ &= svalid
 
-    # ---- locate all ops ----------------------------------------------------
-    dpos, leaf_id, slot, exists, old_vhead = _locate(store, skeys)
+    # ---- locate all ops: ONE descent for updates and searches -------------
+    dpos, leaf_id, slot, exists, old_vhead = _locate(store, skeys, backend)
     exists &= svalid
 
-    # ---- version slots: bump-allocate one per valid op --------------------
-    vofs = jnp.cumsum(svalid.astype(i32)) - 1
-    vslot = jnp.where(svalid, store.n_vers + vofs, MV)        # MV == dropped
-    nval = jnp.sum(svalid.astype(i32))
+    # ---- version slots: bump-allocate one per update op -------------------
+    vofs = jnp.cumsum(upd_s.astype(i32)) - 1
+    vslot = jnp.where(upd_s, store.n_vers + vofs, MV)         # MV == dropped
+    nval = jnp.sum(upd_s.astype(i32))
 
-    # chain: first occurrence links to old vhead, later ones to predecessor
-    prev_slot = jnp.concatenate([jnp.full((1,), -1, i32), vslot[:-1]])
-    vnext = jnp.where(first_occ, old_vhead, prev_slot)
-    vts = base_ts + sidx
-
-    # per-op previous value (sequential semantics inside the batch)
-    prev_vals_sorted = jnp.where(
-        first_occ,
-        jnp.where(
-            exists,
-            _latest_value(store, old_vhead),
-            NOT_FOUND,
-        ),
-        _tomb(jnp.concatenate([jnp.full((1,), NOT_FOUND, i32), svals[:-1]])),
-    )
-    prev_vals_sorted = jnp.where(svalid, prev_vals_sorted, NOT_FOUND)
-
-    # last occurrence of each key group (its vslot becomes the new vhead)
+    # in-batch predecessor: the latest *update* before op i in its key group
+    # (searches interleave freely).  pred[i] = sorted position of that
+    # update, or -1 when op i only sees the pre-batch chain.
     pos_arr = jnp.arange(P, dtype=i32)
     seg_start = _cummax(jnp.where(first_occ, pos_arr, -1))
-    last_of_seg = jnp.full((P,), -1, i32).at[
-        jnp.where(last_occ, seg_start, P - 1)
-    ].max(jnp.where(last_occ, pos_arr, -1))
-    group_vhead = jnp.where(last_of_seg >= 0, vslot[jnp.maximum(last_of_seg, 0)], -1)
+    upd_pos = jnp.where(upd_s, pos_arr, -1)
+    m_incl = _cummax(upd_pos)
+    m_excl = jnp.concatenate([jnp.full((1,), -1, i32), m_incl[:-1]])
+    pred = jnp.where(m_excl >= seg_start, m_excl, -1)
+
+    # chain: first update of a group links to the old vhead, later ones to
+    # their in-batch predecessor's version slot
+    vnext = jnp.where(pred >= 0, vslot[jnp.maximum(pred, 0)], old_vhead)
+    vts = sop_ts
+
+    # per-op predecessor value (sequential semantics inside the batch):
+    # updates report it as their previous value; searches short-circuit to
+    # it when it exists (its timestamp is < theirs by op_ts monotonicity)
+    pred_val = _tomb(svals[jnp.maximum(pred, 0)])
+    head_val = jnp.where(exists, _latest_value(store, old_vhead), NOT_FOUND)
+    prev_vals_sorted = jnp.where(
+        upd_s, jnp.where(pred >= 0, pred_val, head_val), NOT_FOUND
+    )
+
+    # searches with no in-batch predecessor resolve on the PRE-batch chain
+    # at their own snapshot (versions this batch writes all carry ts >=
+    # base_ts > any pre-batch version's, so old-store resolution is exact)
+    rhead = jnp.where(search_s & (pred < 0) & exists, old_vhead, -1)
+    resolved = lax.cond(
+        jnp.any(rhead >= 0),
+        lambda: _resolve(store, rhead, sop_ts, backend),
+        lambda: jnp.full((P,), NOT_FOUND, i32),
+    )
+    search_vals_sorted = jnp.where(
+        search_s,
+        jnp.where(pred >= 0, pred_val, resolved),
+        NOT_FOUND,
+    )
+
+    # per-group new vhead = version slot of the group's LAST update (stored
+    # at the group's first position, where the structural phase reads it)
+    last_upd_of_seg = jnp.full((P,), -1, i32).at[
+        jnp.where(svalid, seg_start, P - 1)
+    ].max(upd_pos)
+    group_vhead = jnp.where(
+        last_upd_of_seg >= 0, vslot[jnp.maximum(last_upd_of_seg, 0)], -1
+    )
+    # per-op view: position of the last update in MY group
+    lus = last_upd_of_seg[jnp.maximum(seg_start, 0)]
 
     # ---- new-key groups (structural inserts) -------------------------------
-    is_new = first_occ & (~exists)
+    # a group is a structural insert iff its key is absent AND it contains
+    # at least one update (search-only groups on missing keys insert nothing)
+    is_new = first_occ & (~exists) & (last_upd_of_seg >= 0)
     n_new = jnp.sum(is_new.astype(i32))
     # compact new entries to the front, preserving key order
     order = jnp.argsort(jnp.where(is_new, 0, 1).astype(i32), stable=True)
@@ -322,11 +352,56 @@ def bulk_update(
         ver_next = store.ver_next.at[vslot].set(vnext, mode="drop")
         n_vers = store.n_vers + nval
 
-        # ---- existing-key vhead updates (last occurrence only) ----
-        upd = last_occ & exists
+        # ---- existing-key vhead updates (group's last update only) ----
+        upd = upd_s & exists & (pos_arr == lus)
         u_leaf = jnp.where(upd, leaf_id, ML)
-        leaf_vhead = store.leaf_vhead.at[u_leaf, slot].set(vslot, mode="drop")
+        leaf_vhead0 = store.leaf_vhead.at[u_leaf, slot].set(vslot, mode="drop")
 
+        # Structural work (workspace merge-sort, splits, directory rebuild)
+        # is only needed when the batch introduces new keys; version-only
+        # batches (the common read/overwrite-heavy case) skip it entirely.
+        # light_path=False reproduces the pre-bulk_apply behaviour
+        # (unconditional structural pass) — the benchmark baseline.
+        if light_path:
+            structure = lax.cond(
+                n_new > 0,
+                lambda lv: _apply_structural(lv),
+                lambda lv: (
+                    store.leaf_keys, lv, store.leaf_count, store.leaf_next,
+                    store.leaf_newnext, store.leaf_frozen, store.leaf_ts,
+                    store.n_alloc, store.dir_keys, store.dir_leaf,
+                    store.n_leaves,
+                ),
+                leaf_vhead0,
+            )
+        else:
+            structure = _apply_structural(leaf_vhead0)
+        (leaf_keys, leaf_vhead, leaf_count, leaf_next, leaf_newnext,
+         leaf_frozen, leaf_ts, n_alloc, dir_keys, dir_leaf,
+         new_n_leaves) = structure
+
+        return dataclasses.replace(
+            store,
+            leaf_keys=leaf_keys,
+            leaf_vhead=leaf_vhead,
+            leaf_count=leaf_count,
+            leaf_next=leaf_next,
+            leaf_newnext=leaf_newnext,
+            leaf_frozen=leaf_frozen,
+            leaf_ts=leaf_ts,
+            n_alloc=n_alloc,
+            dir_keys=dir_keys,
+            dir_leaf=dir_leaf,
+            n_leaves=new_n_leaves,
+            ver_value=ver_value,
+            ver_ts=ver_ts,
+            ver_next=ver_next,
+            n_vers=n_vers,
+            ts=next_ts,
+            oflow=store.oflow,
+        )
+
+    def _apply_structural(leaf_vhead):
         # ---- structural phase: merge new keys into touched leaves ----
         # workspace [P groups, 2L]
         wk_keys = jnp.full((P, 2 * L), KEY_MAX, i32)
@@ -433,35 +508,114 @@ def bulk_update(
         src = jnp.where(npos < new_n_leaves, dir_leaf[npos], ML)
         leaf_next = store.leaf_next.at[src].set(nxt, mode="drop")
 
-        return dataclasses.replace(
-            store,
-            leaf_keys=leaf_keys,
-            leaf_vhead=leaf_vhead,
-            leaf_count=leaf_count,
-            leaf_next=leaf_next,
-            leaf_newnext=leaf_newnext,
-            leaf_frozen=leaf_frozen,
-            leaf_ts=leaf_ts,
-            n_alloc=n_alloc,
-            dir_keys=dir_keys,
-            dir_leaf=dir_leaf,
-            n_leaves=new_n_leaves,
-            ver_value=ver_value,
-            ver_ts=ver_ts,
-            ver_next=ver_next,
-            n_vers=n_vers,
-            ts=base_ts + P,
-            oflow=store.oflow,
-        )
+        return (leaf_keys, leaf_vhead, leaf_count, leaf_next, leaf_newnext,
+                leaf_frozen, leaf_ts, n_alloc, dir_keys, dir_leaf,
+                new_n_leaves)
 
     def reject(store: UruvStore) -> UruvStore:
         return dataclasses.replace(store, oflow=store.oflow | overflow)
 
     new_store = lax.cond(ok, apply, reject, store)
-    # un-sort results back to announce order
-    prev_vals = jnp.zeros((P,), i32).at[sidx].set(prev_vals_sorted)
-    prev_vals = jnp.where(ok, prev_vals, NOT_FOUND)
-    return new_store, prev_vals, ok
+
+    # un-sort per-op results back to announce order (search results were
+    # resolved in-sort: predecessor value or pre-batch chain — the batch is
+    # its own per-op-snapshot answer, no second locate needed)
+    res_sorted = jnp.where(search_s, search_vals_sorted, prev_vals_sorted)
+    results = jnp.zeros((P,), i32).at[sidx].set(res_sorted)
+    results = jnp.where(ok, results, NOT_FOUND)
+    return new_store, results, ok
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "light_path"))
+def _bulk_apply(store, op_codes, keys, values, base_ts, op_ts, next_ts, *,
+                backend, light_path=True):
+    return _bulk_apply_impl(store, op_codes, keys, values, base_ts, op_ts,
+                            next_ts, backend, light_path)
+
+
+def bulk_apply(
+    store: UruvStore,
+    op_codes: jax.Array,
+    keys: jax.Array,
+    values: jax.Array,
+    base_ts=None,
+    *,
+    op_ts=None,
+    next_ts=None,
+    backend: str | None = None,
+    light_path: bool = True,
+) -> Tuple[UruvStore, jax.Array, jax.Array]:
+    """Apply a mixed announce array in ONE jitted device pass.
+
+    ``op_codes[i]`` in {OP_SEARCH, OP_INSERT, OP_DELETE, OP_NOP}.  Op i runs
+    at timestamp ``op_ts[i]`` (default ``base_ts + i``; ``base_ts`` defaults
+    to ``store.ts``) and the clock advances to ``next_ts`` (default
+    ``base_ts + P``).  Results are in announce order: INSERT/DELETE return
+    the previous value, SEARCH the value at its per-op snapshot, NOP/padded
+    (KEY_MAX) keys NOT_FOUND.
+
+    ``op_ts`` must be strictly increasing in announce order (the default and
+    the sharded router both satisfy this); it exists so a shard can apply a
+    routed *subset* of a global announce array while preserving the global
+    announce-order linearization (DESIGN.md Sec 3).
+
+    ``ok=False`` means the batch was rejected atomically (capacity overflow
+    or > L new keys for one leaf) and must be retried via the slow path
+    (``repro.core.batch`` halves it, preserving per-op timestamps).
+
+    Searches and updates share ONE directory descent (the sort carries op
+    codes); a search reads its in-batch predecessor's value directly —
+    exact regardless of how many same-key updates precede it — and only
+    falls back to the bounded (``cfg.max_chain``) pre-batch chain walk when
+    its key was not updated earlier in the batch.
+    """
+    return _bulk_apply(
+        store,
+        jnp.asarray(op_codes, jnp.int32),
+        jnp.asarray(keys, jnp.int32),
+        jnp.asarray(values, jnp.int32),
+        base_ts, op_ts, next_ts,
+        backend=backend or _B.get_backend(),
+        light_path=light_path,
+    )
+
+
+def derive_update_codes(keys: jax.Array, values: jax.Array) -> jax.Array:
+    """Op codes for the legacy (keys, values) update encoding:
+    KEY_MAX key -> NOP, TOMBSTONE value -> DELETE, otherwise INSERT."""
+    return jnp.where(
+        keys >= KEY_MAX, OP_NOP,
+        jnp.where(values == TOMBSTONE, OP_DELETE, OP_INSERT),
+    ).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "light_path"))
+def _bulk_update(store, keys, values, op_ts, next_ts, *, backend,
+                 light_path=True):
+    codes = derive_update_codes(keys, values)
+    return _bulk_apply_impl(store, codes, keys, values, None, op_ts, next_ts,
+                            backend, light_path)
+
+
+def bulk_update(
+    store: UruvStore, keys: jax.Array, values: jax.Array,
+    *, op_ts=None, next_ts=None, backend: str | None = None,
+    light_path: bool = True,
+) -> Tuple[UruvStore, jax.Array, jax.Array]:
+    """Apply a batch of INSERT/DELETE ops (DELETE == value TOMBSTONE).
+
+    Thin wrapper over :func:`bulk_apply` with derived op codes.
+    Linearization: op i gets timestamp ``store.ts + i`` (announce order)
+    unless ``op_ts`` overrides it.  Returns (new_store, prev_values[P], ok).
+    ``ok=False`` means the batch was rejected atomically and must be retried
+    via the slow path (repro.core.batch splits it).  Padded keys (KEY_MAX)
+    are no-ops.
+    """
+    return _bulk_update(
+        store, jnp.asarray(keys, jnp.int32), jnp.asarray(values, jnp.int32),
+        op_ts, next_ts, backend=backend or _B.get_backend(),
+        light_path=light_path,
+    )
 
 
 def _latest_value(store: UruvStore, vhead: jax.Array) -> jax.Array:
@@ -482,25 +636,19 @@ def _cummax(x: jax.Array) -> jax.Array:
 # RANGEQUERY
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("max_scan_leaves", "max_results"))
-def range_query(
+@functools.partial(
+    jax.jit, static_argnames=("max_scan_leaves", "max_results", "backend")
+)
+def _range_query(
     store: UruvStore,
     k1: jax.Array,
     k2: jax.Array,
     snap_ts: jax.Array,
     *,
-    max_scan_leaves: int = 64,
-    max_results: int = 1024,
+    max_scan_leaves: int,
+    max_results: int,
+    backend: str,
 ):
-    """Snapshot range scan (paper Sec 3.4 / Fig. 11).
-
-    Walks the chained leaf level from the first leaf that may contain k1,
-    resolving each key's version at ``snap_ts`` and dropping tombstones.
-    Returns (keys[max_results], values[max_results], count, truncated).
-    ``truncated`` means the scan window (max_scan_leaves) ended before k2 —
-    the host continues with k1' = last returned key + 1 (pagination), so the
-    overall scan is still wait-free: each call is one bounded pass.
-    """
     cfg = store.cfg
     L, ML = cfg.leaf_cap, cfg.max_leaves
     i32 = jnp.int32
@@ -526,7 +674,7 @@ def range_query(
 
     flat_vh = jnp.where(kmask, vheads, -1).reshape(-1)
     flat_keys = jnp.where(kmask, keys, KEY_MAX).reshape(-1)
-    vals = _resolve(store, flat_vh, snap_ts)
+    vals = _resolve(store, flat_vh, snap_ts, backend)
     hit = (flat_keys < KEY_MAX) & (vals != NOT_FOUND)
 
     # compact hits to the front (sorted by key), take max_results
@@ -544,6 +692,32 @@ def range_query(
     )
     truncated = more_leaves | (jnp.sum(hit.astype(i32)) > max_results)
     return out_keys, out_vals, count, truncated
+
+
+def range_query(
+    store: UruvStore,
+    k1: jax.Array,
+    k2: jax.Array,
+    snap_ts: jax.Array,
+    *,
+    max_scan_leaves: int = 64,
+    max_results: int = 1024,
+    backend: str | None = None,
+):
+    """Snapshot range scan (paper Sec 3.4 / Fig. 11).
+
+    Walks the chained leaf level from the first leaf that may contain k1,
+    resolving each key's version at ``snap_ts`` and dropping tombstones.
+    Returns (keys[max_results], values[max_results], count, truncated).
+    ``truncated`` means the scan window (max_scan_leaves) ended before k2 —
+    the host continues with k1' = last returned key + 1 (pagination), so the
+    overall scan is still wait-free: each call is one bounded pass.
+    """
+    return _range_query(
+        store, k1, k2, snap_ts,
+        max_scan_leaves=max_scan_leaves, max_results=max_results,
+        backend=backend or _B.get_backend(),
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -40,7 +40,9 @@ class ShardCtx:
         self.model_axis: Optional[str] = "model" if "model" in names else None
 
     def spec(self, kind: str, ndim: int) -> Optional[P]:
-        b = self.batch_axes if self.batch_axes else None
+        ba = self.batch_axes
+        # canonical PartitionSpec entries: bare axis name unless compound
+        b = (ba[0] if len(ba) == 1 else ba) if ba else None
         m = self.model_axis
         sp = m if self.sequence_parallel else None
         if kind == "residual":
@@ -66,12 +68,12 @@ class ShardCtx:
             # here re-gathers the whole cache per layer (EXPERIMENTS.md
             # §Perf iteration 1).
             if self.long_context:
-                all_axes = tuple(b or ()) + ((m,) if m else ())
+                all_axes = ba + ((m,) if m else ())
                 return P(None, None, all_axes if all_axes else None, None)
             return P(b, None, m, None)
         if kind == "seq_shard":
             # batch=1 long-context: sequence over the whole mesh
-            all_axes = tuple(a for a in (b or ())) + ((m,) if m else ())
+            all_axes = ba + ((m,) if m else ())
             spec = [None] * ndim
             spec[-2] = all_axes if all_axes else None
             return P(*spec)

@@ -1,10 +1,11 @@
 """Jitted public wrappers for the uruv_search kernels.
 
-``locate()`` is the full traversal contract used by the store (directory
-rank -> leaf gather -> in-leaf slot), switchable between the Pallas path and
-the XLA oracle. The store's default (`repro.core.store._locate`) is the XLA
-path so that multi-pod dry-runs lower on any backend; the Pallas path is the
-TPU deployment configuration (see DESIGN.md Sec 7).
+``locate()`` is the full traversal contract (directory rank -> leaf gather
+-> in-leaf slot), switchable between the Pallas path and the XLA oracle.
+The store routes through `repro.core.backend.locate`, which auto-detects
+TPU (compiled Pallas) vs anything else (XLA) with a `URUV_BACKEND`
+override; this module remains the kernel-level entry used by the
+interpret-mode sweeps (see DESIGN.md Sec 3.3 / Sec 7).
 """
 
 from __future__ import annotations

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 from repro.config import ArchConfig
 from repro.core import batch as uruv_batch
 from repro.core import store as uruv_store
+from repro.core.ref import OP_DELETE, OP_INSERT, OP_SEARCH
 from repro.models import transformer
 from repro.models.registry import get_model
 
@@ -83,9 +84,24 @@ class Engine:
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
+    @staticmethod
+    def _select_donor(plens, vals) -> Tuple[int, int]:
+        """Longest prefix whose cached entry covers it -> (donor_slot, plen).
+
+        A hit is usable iff the published length covers the probed prefix
+        (``ln >= plen`` — hash-collision guard); the donor slot's KV stays
+        valid until the slot is re-admitted, which tombstones its keys.
+        """
+        best = (-1, 0)
+        for plen, v in zip(plens, vals):
+            if v >= 0:
+                slot, ln = int(v) >> 16, int(v) & 0xFFFF
+                if ln >= plen:
+                    best = (slot, plen)
+        return best
+
     def _lookup_prefix(self, prompt: List[int]) -> Tuple[int, int]:
         """Longest cached prefix -> (donor_slot, plen); (-1, 0) if none."""
-        best = (-1, 0)
         keys, plens = [], []
         for plen in range(1, len(prompt) + 1):
             keys.append(prefix_hash(prompt[:plen]))
@@ -96,31 +112,31 @@ class Engine:
             jnp.asarray(np.array(keys, np.int32)),
             jnp.asarray(snap, jnp.int32),
         ))
-        for plen, v in zip(plens, vals):
-            if v >= 0:
-                slot, ln = int(v) >> 16, int(v) & 0xFFFF
-                if ln >= plen and self.slot_req[slot] is None or (
-                    self.slot_req[slot] is not None and ln >= plen
-                ):
-                    best = (slot, plen)
-        return best
+        return self._select_donor(plens, vals)
 
-    def _publish_prefixes(self, slot: int, prompt: List[int]) -> None:
-        ks, vs = [], []
-        for plen in range(1, len(prompt) + 1):
-            ks.append(prefix_hash(prompt[:plen]))
-            vs.append((slot << 16) | plen)
-        self.table, _ = uruv_batch.apply_updates(
-            self.table, np.array(ks, np.int32), np.array(vs, np.int32))
-        self._slot_keys[slot].extend(ks)
+    def _admission_pass(self, slot: int, prompt: List[int]) -> Tuple[int, int]:
+        """Retire + prefix-lookup + publish as ONE mixed device pass.
 
-    def _retire_slot(self, slot: int) -> None:
-        ks = self._slot_keys[slot]
-        if ks:
-            self.table, _ = uruv_batch.apply_updates(
-                self.table, np.array(ks, np.int32),
-                np.full(len(ks), uruv_store.TOMBSTONE, np.int32))
-            self._slot_keys[slot] = []
+        Announce order: DELETE the retiring slot's stale prefix keys,
+        SEARCH every prompt prefix (each at its per-op snapshot, so the
+        searches see the retirements but not this prompt's own publishes),
+        then INSERT the new prefix entries — a single `bulk_apply` call on
+        the fast path (DESIGN.md Sec 3) instead of the former
+        update/sync/lookup/sync/update sequence.  Returns (donor, plen).
+        """
+        old_keys = self._slot_keys[slot]
+        n = len(prompt)
+        pkeys = [prefix_hash(prompt[:p]) for p in range(1, n + 1)]
+        ops = (
+            [(OP_DELETE, k, 0) for k in old_keys]
+            + [(OP_SEARCH, k, 0) for k in pkeys]
+            + [(OP_INSERT, k, (slot << 16) | p)
+               for p, k in enumerate(pkeys, start=1)]
+        )
+        self.table, res = uruv_batch.apply_batch(self.table, ops)
+        self._slot_keys[slot] = list(pkeys)
+        search_vals = res[len(old_keys):len(old_keys) + n]
+        return self._select_donor(range(1, n + 1), search_vals)
 
     def _copy_kv(self, dst: int, src: int, upto: int) -> None:
         def cp(x):
@@ -134,8 +150,7 @@ class Engine:
             if self.slot_req[slot] is not None or not self.queue:
                 continue
             req = self.queue.pop(0)
-            self._retire_slot(slot)
-            donor, plen = self._lookup_prefix(req.prompt)
+            donor, plen = self._admission_pass(slot, req.prompt)
             if donor >= 0 and donor != slot and plen > 1 and self._is_tf:
                 self._copy_kv(slot, donor, plen)
                 start, base_len = plen, plen
@@ -159,7 +174,6 @@ class Engine:
                 for t in req.prompt[start:]:
                     self._step_single(slot, t)
             self.slot_req[slot] = req
-            self._publish_prefixes(slot, req.prompt)
 
     def _step_single(self, slot: int, token: int) -> None:
         toks = np.zeros(self.n_slots, np.int32)

@@ -133,14 +133,14 @@ def test_compression_error_feedback(kind):
 
 
 def test_compressed_psum_single_axis():
-    from jax.sharding import Mesh
+    from repro.compat import shard_map
     from repro.optim.compression import compressed_psum
 
     mesh = jax.make_mesh((1,), ("data",))
     g = jnp.asarray(np.random.default_rng(0).standard_normal((64,)),
                     jnp.float32)
     out = jax.jit(
-        jax.shard_map(
+        shard_map(
             lambda x: compressed_psum(x, "data"), mesh=mesh,
             in_specs=jax.sharding.PartitionSpec(),
             out_specs=jax.sharding.PartitionSpec(),

@@ -59,6 +59,36 @@ def test_prefix_hash_stable():
     assert prefix_hash([1, 2, 3]) != prefix_hash([1, 2, 4])
 
 
+def test_select_donor_covers_plen():
+    """Regression for the `and`/`or` precedence bug in the donor condition:
+    a hit is usable iff the cached entry covers the probed prefix
+    (ln >= plen), independent of the donor slot's live/idle state."""
+    pack = lambda slot, ln: (slot << 16) | ln
+    # longest covered prefix wins
+    donor = Engine._select_donor([1, 2, 3], [pack(0, 1), pack(1, 2), -1])
+    assert donor == (1, 2)
+    # entry shorter than the probed prefix (hash collision) must NOT match
+    donor = Engine._select_donor([3], [pack(0, 2)])
+    assert donor == (-1, 0)
+    # no hits at all
+    assert Engine._select_donor([1, 2], [-1, -1]) == (-1, 0)
+
+
+def test_lookup_prefix_uses_completed_donor(tiny_engine_setup):
+    """A donor whose request already completed (slot_req None) still serves
+    prefix hits: its KV stays valid until the slot is re-admitted."""
+    cfg, api, params = tiny_engine_setup
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab, 6).tolist()
+    eng = Engine(cfg, params, n_slots=2, max_len=32)
+    r = Request(rid=0, prompt=prompt, max_new=2)
+    eng.run([r])
+    assert r.done and all(s is None for s in eng.slot_req)
+    donor, plen = eng._lookup_prefix(prompt + [1])
+    assert donor >= 0
+    assert plen == len(prompt)
+
+
 @pytest.fixture(scope="module")
 def tiny_engine_setup():
     cfg = get_arch("llama3_2_1b").reduced()

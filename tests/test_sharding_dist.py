@@ -113,11 +113,11 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import sys
 sys.path.insert(0, "src")
 import numpy as np, jax, jax.numpy as jnp
+from repro.compat import make_mesh
 from repro.core import store as S, sharded as SH
 from repro.core.ref import RefStore, OP_INSERT
 
-mesh = jax.make_mesh((4,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((4,), ("data",))
 cfg = SH.ShardedConfig(
     base=S.UruvConfig(leaf_cap=8, max_leaves=128, max_versions=2048),
     key_lo=0, key_hi=400)
@@ -160,6 +160,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import sys
 sys.path.insert(0, "src")
 import numpy as np, jax, jax.numpy as jnp
+from repro.compat import make_mesh
 from repro.config import get_arch
 from repro.data.pipeline import make_batch
 from repro.distributed import sharding as shd
@@ -168,8 +169,7 @@ from repro.optim import adamw
 from repro.train import steps
 
 cfg = get_arch("llama3_2_1b").reduced()
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 2), ("data", "model"))
 policy = shd.ShardingPolicy(fsdp=True)
 state = steps.init_state(cfg, jax.random.key(0))
 pshard = shd.param_shardings(state.params, mesh, policy)

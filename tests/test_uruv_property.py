@@ -4,6 +4,12 @@ snapshots are linearizable across compaction."""
 
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)",
+)
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.core import batch as B
