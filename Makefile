@@ -1,4 +1,4 @@
-.PHONY: check test bench-kernels bench-mixed
+.PHONY: check test test-range bench-kernels bench-mixed bench-range
 
 check:
 	bash scripts/check.sh
@@ -6,8 +6,15 @@ check:
 test:
 	PYTHONPATH=src python -m pytest -x -q
 
+test-range:
+	PYTHONPATH=src python -m pytest -x -q tests/test_range_property.py \
+		tests/test_kernels.py tests/test_sharding_dist.py
+
 bench-kernels:
 	PYTHONPATH=src python -m benchmarks.run --quick --only kernels
 
 bench-mixed:
 	PYTHONPATH=src python -m benchmarks.run --quick --only mixed
+
+bench-range:
+	PYTHONPATH=src python -m benchmarks.run --quick --only range

@@ -14,6 +14,9 @@ workloads; see each section).  Figures:
   * mixed      — the fused one-pass ``bulk_apply`` vs the pre-fusion
                  two-pass path (update pass + host sync + lookup pass)
                  on a mixed announce array; writes BENCH_mixed.json.
+  * range      — the batched device-resident ``bulk_range`` (Q intervals,
+                 ONE jitted pass) vs the host-paginated per-query
+                 ``range_query`` loop; writes BENCH_range.json.
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick]
 """
@@ -221,6 +224,88 @@ def mixed(quick: bool = False, out_path: str = "BENCH_mixed.json") -> None:
     Path(out_path).write_text(json.dumps(report, indent=2) + "\n")
 
 
+RANGE_CFG = S.UruvConfig(leaf_cap=64, max_leaves=1 << 13,
+                         max_versions=1 << 19, max_chain=64)
+RANGE_RESIDENT = 100_000
+RANGE_UNIVERSE = 1_000_000
+
+
+def _host_paged_ranges(st, k1s, k2s, ts, *, max_scan_leaves, max_results):
+    """The pre-bulk_range serving shape: one jitted `range_query` call per
+    interval, host sync per page, resume from last key + 1 (the seed
+    `range_query_all` loop, batched over queries by a host for-loop)."""
+    out = []
+    for a, b in zip(k1s, k2s):
+        lo, items = int(a), []
+        while True:
+            keys, vals, cnt, trunc = S.range_query(
+                st, lo, int(b), ts,
+                max_scan_leaves=max_scan_leaves, max_results=max_results)
+            cnt = int(cnt)
+            k = np.asarray(keys)[:cnt]
+            items.extend(zip(k.tolist(), np.asarray(vals)[:cnt].tolist()))
+            if not bool(trunc):
+                break
+            lo = int(k[-1]) + 1 if cnt else lo + 1
+        out.append(items)
+    return out
+
+
+def range_bench(quick: bool = False, out_path: str = "BENCH_range.json") -> None:
+    """Batched `bulk_range` vs the host-paginated per-query loop.
+
+    Workload: Q mixed-width intervals (widths log-spread from point-ish
+    scans to ~4k-key spans) over a 100k-key resident store — the serve
+    engine's snapshot_view / data pipeline epoch-reader traffic.  Both
+    paths return identical (key, value) pages; the fused path is ONE
+    device call for all Q queries (in-pass pagination)."""
+    rng = np.random.default_rng(7)
+    st = S.create(RANGE_CFG)
+    resident = rng.choice(RANGE_UNIVERSE, RANGE_RESIDENT,
+                          replace=False).astype(np.int32)
+    for i in range(0, RANGE_RESIDENT, 4096):
+        st, _ = B.apply_updates(st, resident[i:i+4096],
+                                resident[i:i+4096] % 1000 + 1)
+    ts = int(st.ts)
+    # both Q points always run (the acceptance evidence in BENCH_range.json
+    # covers Q=64 and Q=256); quick mode trims the timing repeats instead
+    qs = [64, 256]
+    repeats = (3, 1) if quick else (5, 2)
+    widths = np.array([100, 1_000, 10_000, 40_000])     # mixed-width mix
+    report = {}
+    for Q in qs:
+        k1 = rng.integers(0, RANGE_UNIVERSE - 50_000, Q).astype(np.int32)
+        k2 = (k1 + widths[np.arange(Q) % len(widths)]).astype(np.int32)
+
+        # the two paths must agree before we time them
+        pages = B.bulk_range_all(st, k1, k2, ts, max_results=4096,
+                                 scan_leaves=32, max_rounds=1)
+        paged = _host_paged_ranges(st, k1, k2, ts,
+                                   max_scan_leaves=128, max_results=4096)
+        assert pages == paged, "bulk_range and host-paginated loop disagree"
+
+        def run_bulk():
+            B.bulk_range_all(st, k1, k2, ts, max_results=4096,
+                             scan_leaves=32, max_rounds=1)
+
+        bsec = W.timed(run_bulk, repeats=repeats[0], warmup=1)
+
+        def run_paged():
+            _host_paged_ranges(st, k1, k2, ts,
+                               max_scan_leaves=128, max_results=4096)
+
+        psec = W.timed(run_paged, repeats=repeats[1], warmup=1)
+        emit(f"range_bulk_q{Q}", bsec * 1e6, f"{Q/bsec/1e3:.2f}Kq/s")
+        emit(f"range_host_paged_q{Q}", psec * 1e6, f"{Q/psec/1e3:.2f}Kq/s")
+        emit(f"range_speedup_q{Q}", psec / bsec, f"{psec/bsec:.2f}x")
+        report[f"q{Q}"] = {
+            "bulk_us": round(bsec * 1e6, 1),
+            "host_paged_us": round(psec * 1e6, 1),
+            "speedup": round(psec / bsec, 2),
+        }
+    Path(out_path).write_text(json.dumps(report, indent=2) + "\n")
+
+
 def roofline_summary() -> None:
     """Dry-run roofline: dominant term for the hillclimbed cells (full
     table in EXPERIMENTS.md; reads experiments/dryrun artifacts)."""
@@ -249,7 +334,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="fig8|fig9|complexity|kernels|mixed|roofline")
+                    help="fig8|fig9|complexity|kernels|mixed|range|roofline")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     sections = {
@@ -258,6 +343,7 @@ def main() -> None:
         "complexity": table_complexity,
         "kernels": lambda: kernels(args.quick),
         "mixed": lambda: mixed(args.quick),
+        "range": lambda: range_bench(args.quick),
         "roofline": roofline_summary,
     }
     if args.only:

@@ -1,13 +1,16 @@
 #!/usr/bin/env bash
 # Tier-1 gate + perf trajectory.  Run from the repo root:  bash scripts/check.sh
-# (or `make check`).  Writes BENCH_mixed.json so the fused-pass speedup
-# accumulates across PRs.
+# (or `make check`).  Writes BENCH_mixed.json + BENCH_range.json so the
+# fused-pass speedups accumulate across PRs.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== tier-1 tests =="
+# The full suite (pytest -x -q) includes the range/snapshot battery
+# (tests/test_range_property.py) and the kernel + sharded range parity
+# tests (tests/test_kernels.py, tests/test_sharding_dist.py).
 python -m pytest -x -q
 
 echo "== kernel microbench (quick) =="
@@ -16,5 +19,11 @@ python -m benchmarks.run --quick --only kernels
 echo "== fused mixed-op pass vs two-pass (quick; writes BENCH_mixed.json) =="
 python -m benchmarks.run --quick --only mixed
 
+echo "== batched bulk_range vs host-paged loop (quick; writes BENCH_range.json) =="
+python -m benchmarks.run --quick --only range
+
 echo "== BENCH_mixed.json =="
 cat BENCH_mixed.json
+
+echo "== BENCH_range.json =="
+cat BENCH_range.json

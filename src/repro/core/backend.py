@@ -1,15 +1,16 @@
 """Backend dispatch for the Uruv hot-path primitives (DESIGN.md Sec 7).
 
-The store's two inner loops — ``locate`` (directory descent + in-leaf rank)
-and ``resolve`` (versioned chain read) — have three interchangeable
-implementations with one contract:
+The store's three inner loops — ``locate`` (directory descent + in-leaf
+rank), ``resolve`` (versioned chain read), and ``range_scan`` (fused
+leaf-window gather + versioned resolve for batched range queries) — have
+three interchangeable implementations with one contract:
 
   * ``xla``              — pure-jnp formulation (``searchsorted`` descent,
     ``while_loop`` chain walk).  Lowers on every backend; the portable
     default off-TPU.
   * ``pallas``           — the compiled Pallas TPU kernels
-    (``repro.kernels.uruv_search`` + ``repro.kernels.versioned_read``).
-    Deployment configuration on real TPUs.
+    (``repro.kernels.uruv_search`` + ``repro.kernels.versioned_read`` +
+    ``repro.kernels.uruv_range``).  Deployment configuration on real TPUs.
   * ``pallas_interpret`` — the same kernels under the Pallas interpreter;
     kernel-coverage testing on CPU containers.
 
@@ -135,3 +136,46 @@ def resolve(vhead, snap_ts, ver_ts, ver_next, ver_value, *, max_chain: int,
     ok = ok & (ts_cur <= snap_ts)
     val = jnp.where(ok, ver_value[jnp.maximum(cur, 0)], NOT_FOUND)
     return jnp.where(val == TOMBSTONE, NOT_FOUND, val)
+
+
+# ---------------------------------------------------------------------------
+# range_scan: fused leaf-window gather + in-interval mask + versioned resolve
+# (the candidate phase of store.bulk_range; paper Sec 3.4)
+# ---------------------------------------------------------------------------
+
+def range_scan(lids, pvalid, k1, k2, snap_ts, leaf_keys, leaf_vhead,
+               leaf_count, ver_ts, ver_next, ver_value, *, max_chain: int,
+               backend: str):
+    """Candidate keys/values for Q leaf windows: (cand_keys, cand_vals) [Q, S*L].
+
+    ``lids[q, s]`` is the s-th leaf of query q's scan window (``pvalid``
+    masks non-participating slots).  Hits carry (key, value-at-snapshot);
+    non-hits are (KEY_MAX, NOT_FOUND) — tombstones already dropped.
+    Trace-time dispatch: call only where ``backend`` is static.
+    """
+    if backend != XLA:
+        from repro.kernels.uruv_range.uruv_range import range_scan as _pallas_rs
+
+        return _pallas_rs(
+            lids, pvalid, k1, k2, snap_ts,
+            leaf_keys, leaf_vhead, leaf_count, ver_ts, ver_next, ver_value,
+            max_chain=max_chain, interpret=(backend == PALLAS_INTERPRET),
+        )
+    Q, S = lids.shape
+    L = leaf_keys.shape[1]
+    rows = leaf_keys[lids]                                 # [Q, S, L]
+    vhs = leaf_vhead[lids]
+    cnt = leaf_count[lids]
+    slot_ok = jnp.arange(L, dtype=jnp.int32)[None, None, :] < cnt[..., None]
+    cand = (
+        pvalid[..., None] & slot_ok
+        & (rows >= k1[:, None, None]) & (rows <= k2[:, None, None])
+    )
+    flat_vh = jnp.where(cand, vhs, -1).reshape(-1)
+    snap = jnp.broadcast_to(snap_ts[:, None, None], cand.shape).reshape(-1)
+    vals = resolve(flat_vh, snap, ver_ts, ver_next, ver_value,
+                   max_chain=max_chain, backend=XLA).reshape(Q, S, L)
+    hit = cand & (vals != NOT_FOUND)
+    cand_keys = jnp.where(hit, rows, KEY_MAX).reshape(Q, S * L)
+    cand_vals = jnp.where(hit, vals, NOT_FOUND).reshape(Q, S * L)
+    return cand_keys, cand_vals

@@ -31,6 +31,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import store as S
+from repro.core.ref import KEY_MAX, NOT_FOUND, OP_RANGE
 
 
 class CapacityError(RuntimeError):
@@ -128,15 +129,129 @@ def apply_batch(
     """Mixed announce array of (op, key, value) — the full ADT, linearized
     in announce order (op i at ts base+i), matching RefStore.apply_batch.
 
-    Fast path: exactly one device pass (`store.bulk_apply`) for the whole
-    array — searches and updates complete together, no host sync between
-    them (DESIGN.md Sec 3).
+    RANGEQUERY rides in the same announce array: ``(OP_RANGE, k1, k2)`` at
+    announce index i scans [k1, k2] at snapshot ``base + i`` — it observes
+    every earlier in-batch update and none of the later ones — and its
+    result is the live-key count (full pages via :func:`bulk_range_all`).
+
+    Fast path: one device pass (`store.bulk_apply`) for a pure-CRUD array
+    (zero host syncs).  With range ops, the array executes in segments at
+    range boundaries: each CRUD run is one `bulk_apply` at its original
+    announce timestamps and each run of consecutive range ops is ONE
+    batched `store.bulk_range` pass against the store state that precedes
+    it — so a range snapshot resolves every key at chain depth 0 and stays
+    exact no matter how many same-key updates FOLLOW it in the batch
+    (resolving post-hoc would walk those later versions and silently lose
+    keys past cfg.max_chain; the segment order is the range analogue of
+    the in-pass predecessor short-circuit that makes SEARCH exact,
+    DESIGN.md Sec 3/8).
     """
     codes = np.array([o[0] for o in ops], np.int32)
     keys = np.array([o[1] for o in ops], np.int32)
     vals = np.array([o[2] for o in ops], np.int32)
-    store, res = _apply_rounds(store, codes, keys, vals, None, None)
-    return store, res.astype(np.int64).tolist()
+    rmask = codes == OP_RANGE
+    if not rmask.any():
+        store, res = _apply_rounds(store, codes, keys, vals, None, None)
+        return store, res.astype(np.int64).tolist()
+    n = len(codes)
+    base = int(store.ts)
+    op_ts = (base + np.arange(n)).astype(np.int32)
+    results = np.full(n, NOT_FOUND, np.int64)
+    i = 0
+    while i < n:
+        j = i
+        while j < n and bool(rmask[j]) == bool(rmask[i]):
+            j += 1
+        if rmask[i]:
+            pages = bulk_range_all(store, keys[i:j], vals[i:j], op_ts[i:j])
+            results[i:j] = [len(p) for p in pages]
+        else:
+            store, res = _apply_rounds(
+                store, codes[i:j], keys[i:j], vals[i:j], op_ts[i:j], base + j
+            )
+            results[i:j] = res
+        i = j
+    if int(store.ts) != base + n:     # batch ended with range ops
+        store = dataclasses.replace(
+            store, ts=jnp.asarray(base + n, jnp.int32)
+        )
+    return store, results.tolist()
+
+
+# ---------------------------------------------------------------------------
+# Batched range search sequencing (host side of store.bulk_range)
+# ---------------------------------------------------------------------------
+
+# sentinel interval that can never match a key (retired queries re-enter the
+# device pass as no-ops: lo > every key, k2 < every key => zero work)
+_DONE_LO = KEY_MAX
+_DONE_HI = -(2**31)
+
+
+def bulk_range_all(
+    store: S.UruvStore,
+    k1s,
+    k2s,
+    snap_ts,
+    *,
+    max_results: int = 1024,
+    scan_leaves: int = 16,
+    max_rounds: int = 8,
+) -> List[List[Tuple[int, int]]]:
+    """Answer Q range queries COMPLETELY; returns per-query (key, value) lists.
+
+    One `store.bulk_range` device pass answers all Q intervals at once (the
+    pooled in-pass budget covers Q * max_rounds * scan_leaves leaves,
+    distributed by need); only queries still truncated after that re-enter
+    the next pass, resuming from their exact ``resume_k1`` — so a giant
+    scan costs O(pages) device rounds TOTAL, not O(pages) per query.  The
+    active set is compacted (to power-of-two widths, bounding retraces)
+    between passes, so tail pages only pay for the queries still scanning.
+    Read-only: ``snap_ts`` (scalar or [Q]) must already be registered if
+    isolation across later updates is required (see store.snapshot /
+    release).
+    """
+    k1 = np.asarray(k1s, np.int32).reshape(-1)
+    k2 = np.asarray(k2s, np.int32).reshape(-1)
+    Q = len(k1)
+    snaps = np.broadcast_to(np.asarray(snap_ts, np.int32), (Q,))
+    out: List[List[Tuple[int, int]]] = [[] for _ in range(Q)]
+    idx = np.arange(Q)                    # active query -> caller position
+    lo, hi, sn = k1.copy(), k2.copy(), snaps.copy()
+    for _ in range(MAX_SLOWPATH_ROUNDS * 64):
+        W = max(1, 1 << int(len(idx) - 1).bit_length())   # pad: bounded shapes
+        pad = W - len(idx)
+        lo_p = np.concatenate([lo, np.full(pad, _DONE_LO, np.int32)])
+        hi_p = np.concatenate([hi, np.full(pad, _DONE_HI, np.int32)])
+        sn_p = np.concatenate([sn, np.zeros(pad, np.int32)])
+        keys, vals, cnt, trunc, resume = S.bulk_range(
+            store, lo_p, hi_p, sn_p,
+            max_results=max_results, scan_leaves=scan_leaves,
+            max_rounds=max_rounds,
+        )
+        keys = np.asarray(keys)
+        vals = np.asarray(vals)
+        cnt = np.asarray(cnt)
+        trunc = np.asarray(trunc)[: len(idx)]
+        resume = np.asarray(resume)
+        for a, q in enumerate(idx):
+            c = int(cnt[a])
+            out[q].extend(zip(keys[a, :c].tolist(), vals[a, :c].tolist()))
+        if not trunc.any():
+            break
+        act = np.nonzero(trunc)[0]
+        idx = idx[act]
+        lo = resume[act].astype(np.int32)
+        hi = hi[act]
+        sn = sn[act]
+    else:
+        raise CapacityError(
+            "bulk_range_all failed to converge: "
+            f"{len(idx)} queries still truncated after "
+            f"{MAX_SLOWPATH_ROUNDS * 64} passes; widen max_results or the "
+            "scan_leaves * max_rounds leaf budget"
+        )
+    return out
 
 
 def range_query_all(
@@ -150,27 +265,27 @@ def range_query_all(
 ) -> Tuple[S.UruvStore, List[Tuple[int, int]]]:
     """Paginated snapshot range scan covering [k1, k2] completely.
 
-    Each device pass is bounded (wait-free); the host continues from the
-    last key seen. Registers/releases the snapshot in the version tracker.
+    Thin Q=1 wrapper over :func:`bulk_range_all` (kept for its
+    register-the-snapshot convenience and the legacy signature); each
+    device pass is bounded (wait-free) at exactly ``max_scan_leaves``
+    leaves — the seed contract — and the host re-enters only for scans
+    larger than that or than ``max_results`` hits per page.
+    Registers/releases the snapshot in the version tracker when
+    ``snap_ts`` is None.
     """
     own_snap = snap_ts is None
     if own_snap:
         store, ts = S.snapshot(store)
         snap_ts = int(ts)
-    out: List[Tuple[int, int]] = []
-    lo = k1
-    for _ in range(MAX_SLOWPATH_ROUNDS * 64):
-        keys, vals, cnt, trunc = S.range_query(
-            store, lo, k2, snap_ts,
-            max_scan_leaves=max_scan_leaves, max_results=max_results,
-        )
-        cnt = int(cnt)
-        k = np.asarray(keys)[:cnt]
-        v = np.asarray(vals)[:cnt]
-        out.extend(zip(k.tolist(), v.tolist()))
-        if not bool(trunc):
-            break
-        lo = int(k[-1]) + 1 if cnt else lo + 1  # pragma: no cover (giant scans)
+    # no try/finally: on CapacityError the caller keeps the store it passed
+    # in, which never held this registration (functional updates self-heal;
+    # stateful owners like engine.snapshot_views DO need the finally)
+    out = bulk_range_all(
+        store, [k1], [k2], snap_ts,
+        max_results=max_results,
+        scan_leaves=max_scan_leaves,
+        max_rounds=1,
+    )[0]
     if own_snap:
         store = S.release(store, snap_ts)
     return store, out

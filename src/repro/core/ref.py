@@ -33,6 +33,7 @@ OP_INSERT = 0
 OP_DELETE = 1
 OP_SEARCH = 2
 OP_NOP = 3
+OP_RANGE = 4                 # RANGEQUERY: key = k1, value = k2; result = count
 
 
 @dataclass
@@ -115,7 +116,8 @@ class RefStore:
 
         Op i gets timestamp base_ts + i.  Returns per-op results:
         INSERT -> previous value (NOT_FOUND if new); DELETE -> previous value;
-        SEARCH -> value; NOP -> NOT_FOUND.
+        SEARCH -> value; RANGE (key=k1, value=k2) -> number of live keys in
+        [k1, k2] at the op's snapshot; NOP -> NOT_FOUND.
         """
         base = self.ts
         results = []
@@ -129,6 +131,8 @@ class RefStore:
                 self._append_version(key, TOMBSTONE, ts=ts_i)
             elif op == OP_SEARCH:
                 results.append(self.search_at(key, ts_i))
+            elif op == OP_RANGE:
+                results.append(len(self.range_query(key, value, ts_i)))
             else:
                 results.append(NOT_FOUND)
         self.ts = base + len(ops)

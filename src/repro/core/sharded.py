@@ -21,8 +21,13 @@ device axis, sharded over ``axis_name``).  Bulk ADT calls are SPMD programs:
                the host falls back to the replicated pass.
   update:  thin wrapper deriving INSERT/DELETE codes (legacy API).
   lookup:  all_gather -> owner answers -> psum-combine (one-hot by ownership).
-  range :  every shard scans its local intersection of [k1,k2]; results are
-           all_gather'ed and host-merged.
+  range :  batched fan-out/gather (``make_range_apply``) — every shard runs
+           ONE `store.bulk_range` pass over its owned leaves at the global
+           snapshots, the per-shard result blocks are all_gather'ed and
+           merged by key ON DEVICE (frontier-clamped so paginated results
+           stay exact), bit-identical to the single-device `bulk_range`
+           including version-timestamp resolution.  The legacy per-interval
+           ``range`` op of :func:`make_ops` remains for the Q=1 path.
 
 The global clock stays consistent without communication: every shard
 advances its local ts to ``base + G`` per batch regardless of how many ops
@@ -43,7 +48,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core import store as S
-from repro.core.ref import KEY_MAX, NOT_FOUND, OP_NOP
+from repro.core.ref import KEY_MAX, NOT_FOUND, OP_NOP, OP_RANGE
 
 
 @dataclasses.dataclass(frozen=True)
@@ -201,6 +206,80 @@ def make_routed_apply(cfg: ShardedConfig, mesh: Mesh, *, route_factor: int = 2):
     )
 
 
+def make_range_apply(cfg: ShardedConfig, mesh: Mesh, *,
+                     max_results: int = 1024, scan_leaves: int = 16,
+                     max_rounds: int = 8):
+    """Jitted SPMD batched range search over a *replicated* query array.
+
+    (store, k1[Q], k2[Q], snap_ts[Q]) ->
+        (keys[Q, max_results], values[Q, max_results], count[Q],
+         truncated[Q], resume_k1[Q])
+
+    Every shard answers all Q intervals against its OWN leaves in one
+    `store.bulk_range` pass (a shard only holds keys it owns, so the scan
+    is naturally the local intersection of [k1, k2]); the per-shard blocks
+    are all_gather'ed and merged by key on device.  Because shards share
+    the replicated global clock and per-op timestamps (DESIGN.md Sec 3),
+    the merged rows — values AND their snapshot resolution — are
+    bit-identical to single-device `bulk_range` whenever neither side
+    budget-truncates (and on `max_results` overflow, which caps both
+    identically).  Note the leaf budget is pooled PER SHARD: the sharded
+    aggregate is n_shards x the single-device pool, so a scan that
+    exhausts the single-device budget may complete here — size budgets
+    for the per-shard window when exact truncation parity matters.
+
+    Exactness under truncation: a shard that truncated has only covered
+    keys below its ``resume_k1``, so the merge clamps to the minimum
+    truncated-shard resume point (the frontier) before taking the
+    max_results smallest keys; ``resume_k1`` of the merged result lets the
+    host paginate exactly as in the single-device contract.
+    """
+    ax = cfg.axis_name
+    n_shards = mesh.shape[ax]
+    R = max_results
+
+    def _range_block(st_blk, k1, k2, snap):
+        st = jax.tree.map(lambda x: x[0], st_blk)
+        i32 = jnp.int32
+        Q = k1.shape[0]
+        keys, vals, _, trunc, resume = S.bulk_range(
+            st, k1, k2, snap,
+            max_results=R, scan_leaves=scan_leaves, max_rounds=max_rounds,
+        )
+        allk = lax.all_gather(keys, ax)                    # [n, Q, R]
+        allv = lax.all_gather(vals, ax)
+        allt = lax.all_gather(trunc, ax)                   # [n, Q]
+        allr = lax.all_gather(resume, ax)
+        ceil = jnp.min(jnp.where(allt, allr, KEY_MAX), axis=0)      # [Q]
+        mk = jnp.moveaxis(allk, 0, 1).reshape(Q, n_shards * R)
+        mv = jnp.moveaxis(allv, 0, 1).reshape(Q, n_shards * R)
+        keep = mk < ceil[:, None]          # drops padding AND beyond-frontier
+        mk = jnp.where(keep, mk, KEY_MAX)
+        mv = jnp.where(keep, mv, NOT_FOUND)
+        sk, sv = lax.sort((mk, mv), dimension=1, num_keys=1)
+        total = jnp.sum(keep.astype(i32), axis=1)
+        count = jnp.minimum(total, R)
+        out_keys, out_vals = sk[:, :R], sv[:, :R]
+        overflow = total > R
+        trunc_g = overflow | (ceil < KEY_MAX)
+        last = jnp.take_along_axis(
+            out_keys, jnp.maximum(count - 1, 0)[:, None], axis=1
+        )[:, 0]
+        resume_g = jnp.where(
+            overflow, last + 1, jnp.where(ceil < KEY_MAX, ceil, k2)
+        )
+        return out_keys, out_vals, count, trunc_g, resume_g
+
+    return jax.jit(
+        shard_map(
+            _range_block,
+            mesh=mesh,
+            in_specs=(P(ax), P(None), P(None), P(None)),
+            out_specs=(P(), P(), P(), P(), P()),
+        )
+    )
+
+
 def pad_announce(codes, keys, values, multiple: int):
     """Pad a host announce array with NOPs to a width multiple (routing)."""
     codes = np.asarray(codes, np.int32)
@@ -220,8 +299,16 @@ def sharded_apply_batch(store, codes, keys, values, *, apply_fn,
 
     Returns (store, results[G]).  Raises RuntimeError if even the
     replicated pass rejects (capacity; compact + retry is the caller's
-    policy, mirroring repro.core.batch).
+    policy, mirroring repro.core.batch).  CRUD codes only: the SPMD passes
+    are built on `store.bulk_apply`, which treats OP_RANGE as NOP — range
+    announce arrays go through :func:`make_range_apply` instead, so reject
+    them loudly here rather than silently returning NOT_FOUND.
     """
+    if np.any(np.asarray(codes) == OP_RANGE):
+        raise ValueError(
+            "sharded_apply_batch handles SEARCH/INSERT/DELETE/NOP only; "
+            "answer OP_RANGE announce arrays via make_range_apply"
+        )
     if routed_fn is not None:
         new_store, res, ok = routed_fn(
             store, jnp.asarray(codes), jnp.asarray(keys), jnp.asarray(values)

@@ -568,6 +568,11 @@ def bulk_apply(
     exact regardless of how many same-key updates precede it — and only
     falls back to the bounded (``cfg.max_chain``) pre-batch chain walk when
     its key was not updated earlier in the batch.
+
+    Recognized codes are SEARCH/INSERT/DELETE/NOP only: OP_RANGE must flow
+    through ``repro.core.batch.apply_batch`` (which segments the announce
+    array and answers range ops via :func:`bulk_range`); an unrecognized
+    code here degrades to NOP.
     """
     return _bulk_apply(
         store,
@@ -717,6 +722,155 @@ def range_query(
         store, k1, k2, snap_ts,
         max_scan_leaves=max_scan_leaves, max_results=max_results,
         backend=backend or _B.get_backend(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# bulk_range — ONE device pass over a whole announce array of range queries
+# (the range-search analogue of bulk_apply; DESIGN.md Sec 8).  All Q
+# intervals share one directory descent (two searchsorted rank passes give
+# every query its exact leaf window [lo, hi)); the windows are flattened
+# into ONE pooled (query, leaf) worklist so narrow queries donate unscanned
+# budget to wide ones, and the leaf gather + version resolve over the
+# worklist is fused in repro.kernels.uruv_range.
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_results", "scan_leaves", "max_rounds", "backend"),
+)
+def _bulk_range(store, k1, k2, snap_ts, *, max_results, scan_leaves,
+                max_rounds, backend):
+    cfg = store.cfg
+    L, ML = cfg.leaf_cap, cfg.max_leaves
+    i32 = jnp.int32
+    Q = k1.shape[0]
+    R = max_results
+    T = Q * scan_leaves * max_rounds      # pooled leaf budget for this pass
+
+    # ---- shared directory descent: rank k1 AND k2 for every query --------
+    lo = jnp.maximum(
+        jnp.searchsorted(store.dir_keys, k1, side="right").astype(i32) - 1, 0
+    )
+    hi = jnp.searchsorted(store.dir_keys, k2, side="right").astype(i32)
+    hi = jnp.minimum(jnp.maximum(hi, lo + 1), store.n_leaves)
+    # leaves needed: lo is always scanned for a real interval; inverted
+    # intervals (k1 > k2) get a zero-width window so they are complete
+    # empty results even when the pooled budget runs dry (never truncated)
+    n_win = jnp.where(k1 > k2, 0, jnp.maximum(hi - lo, 1))
+
+    # ---- flat worklist: task t -> (query qid[t], leaf position ppos[t]) ---
+    offs = jnp.cumsum(n_win) - n_win      # exclusive prefix over windows
+    total = offs[Q - 1] + n_win[Q - 1]
+    t = jnp.arange(T, dtype=i32)
+    qid = jnp.clip(
+        jnp.searchsorted(offs, t, side="right").astype(i32) - 1, 0, Q - 1
+    )
+    tvalid = t < total
+    ppos = lo[qid] + (t - offs[qid])
+    tvalid &= ppos < store.n_leaves
+    lids = jnp.where(tvalid, store.dir_leaf[jnp.minimum(ppos, ML - 1)], 0)
+
+    # ---- fused gather + in-interval mask + versioned resolve (kernel) -----
+    cand_keys, cand_vals = _B.range_scan(
+        lids[:, None], tvalid[:, None], k1[qid], k2[qid], snap_ts[qid],
+        store.leaf_keys, store.leaf_vhead, store.leaf_count,
+        store.ver_ts, store.ver_next, store.ver_value,
+        max_chain=cfg.max_chain, backend=backend,
+    )                                     # [T, L]
+
+    # ---- per-query compaction WITHOUT sorting: the worklist is laid out
+    # per query in leaf order and every leaf row is key-sorted, so the
+    # flat candidate stream is already (query, key)-ordered.  A running
+    # hit count + binary search recovers each query's r-th hit by gather
+    # (a full lax.sort here costs more than the rest of the pass). --------
+    hit = cand_keys.reshape(-1) < KEY_MAX
+    N = T * L
+    csum = jnp.cumsum(hit.astype(i32))                    # inclusive [N]
+    n_hits_total = csum[N - 1]
+    flat_start = jnp.minimum(offs, T) * L                 # query q's slice of
+    flat_end = jnp.minimum(offs + n_win, T) * L           # the scanned stream
+    hits_before = jnp.where(
+        flat_start > 0, csum[jnp.maximum(flat_start - 1, 0)], 0
+    )
+    n_hit = csum[jnp.maximum(flat_end - 1, 0)] - hits_before
+    n_hit = jnp.where(flat_end > flat_start, n_hit, 0)
+    count = jnp.minimum(n_hit, R)
+    g = hits_before[:, None] + jnp.arange(R, dtype=i32)[None, :]
+    in_seg = jnp.arange(R, dtype=i32)[None, :] < count[:, None]
+    idx = jnp.searchsorted(
+        csum, jnp.minimum(g + 1, n_hits_total), side="left"
+    ).astype(i32)
+    idxc = jnp.minimum(idx, N - 1)
+    out_keys = jnp.where(in_seg, cand_keys.reshape(-1)[idxc], KEY_MAX)
+    out_vals = jnp.where(in_seg, cand_vals.reshape(-1)[idxc], NOT_FOUND)
+
+    # ---- truncation + resume (pagination contract) ------------------------
+    scanned = jnp.clip(T - offs, 0, n_win)   # leaves this pass covered
+    covered = scanned == n_win
+    overflow = n_hit > R
+    truncated = overflow | (~covered)
+    # resume point for truncated queries:
+    #   * result-block overflow -> last kept key + 1 (re-scan dropped keys)
+    #   * budget exhausted      -> separator of the first unscanned leaf
+    #     (every scanned key is < that separator: nothing skipped or
+    #     duplicated); 0 leaves scanned resumes at k1 unchanged — the pooled
+    #     worklist always finishes earlier queries first, so every pass
+    #     makes progress.
+    last_key = jnp.take_along_axis(
+        out_keys, jnp.maximum(count - 1, 0)[:, None], axis=1
+    )[:, 0]
+    unscanned_sep = jnp.where(
+        scanned > 0, store.dir_keys[jnp.minimum(lo + scanned, ML - 1)], k1
+    )
+    resume_k1 = jnp.where(
+        overflow, last_key + 1, jnp.where(~covered, unscanned_sep, k2)
+    )
+    return out_keys, out_vals, count, truncated, resume_k1
+
+
+def bulk_range(
+    store: UruvStore,
+    k1: jax.Array,
+    k2: jax.Array,
+    snap_ts: jax.Array,
+    *,
+    max_results: int = 1024,
+    scan_leaves: int = 16,
+    max_rounds: int = 8,
+    backend: str | None = None,
+):
+    """Batched snapshot range scan: Q intervals in ONE jitted device pass.
+
+    ``k1[i], k2[i]`` bound query i (inclusive; ``k1 > k2`` yields an empty
+    result) and ``snap_ts`` (scalar or [Q]) is each query's snapshot — the
+    RANGEQUERY LP of paper Sec 3.4, resolved per key by the fused
+    ``uruv_range`` kernel.  Returns
+    ``(keys[Q, max_results], values[Q, max_results], count[Q],
+    truncated[Q], resume_k1[Q])`` with rows key-sorted and KEY_MAX /
+    NOT_FOUND padded.
+
+    Pagination happens IN-PASS: the pass carries a pooled leaf budget of
+    ``Q * scan_leaves * max_rounds`` tasks (one bounded data-parallel
+    step — the wait-free bound), distributed by NEED: each query's exact
+    window [lo, hi) comes from the shared descent and the windows are
+    flattened into one worklist, so a point query costs one leaf and the
+    budget it didn't use covers wide scans instead of being burned on
+    fixed per-query windows.  ``truncated[i]`` means query i's interval
+    was not fully covered — the result block overflowed ``max_results`` or
+    the pooled budget ran out before its window — and ``resume_k1[i]`` is
+    the exact key to resume from (``repro.core.batch.bulk_range_all``
+    host-paginates only the still-truncated queries).
+
+    Read-only: does not advance the clock or touch the tracker (callers
+    register snapshots via :func:`snapshot` / :func:`release`).
+    """
+    k1 = jnp.asarray(k1, jnp.int32)
+    snap_ts = jnp.broadcast_to(jnp.asarray(snap_ts, jnp.int32), k1.shape)
+    return _bulk_range(
+        store, k1, jnp.asarray(k2, jnp.int32), snap_ts,
+        max_results=max_results, scan_leaves=scan_leaves,
+        max_rounds=max_rounds, backend=backend or _B.get_backend(),
     )
 
 

@@ -89,6 +89,8 @@ class StreamingSampleStore:
     * ``ingest(ids, offsets)``     — producer INSERTs (wait-free bulk pass)
     * ``epoch_view()``             — snapshot ts for a consistent epoch
     * ``read_shard(lo, hi, snap)`` — RANGEQUERY a shard of sample ids
+    * ``read_shards(bounds, snap)``— ALL epoch readers' shard ranges in ONE
+                                     batched `bulk_range` device pass
     * ``retire_below(id)``         — DELETE consumed samples (tombstones);
                                      physical reclaim via compact()
     """
@@ -109,15 +111,28 @@ class StreamingSampleStore:
         self.store = uruv_store.release(self.store, snap)
 
     def read_shard(self, lo: int, hi: int, snap: int) -> List[Tuple[int, int]]:
-        self.store, out = uruv_batch.range_query_all(
-            self.store, lo, hi, snap
+        return self.read_shards([(lo, hi)], snap)[0]
+
+    def read_shards(
+        self, bounds: List[Tuple[int, int]], snap: int
+    ) -> List[List[Tuple[int, int]]]:
+        """Epoch fan-out: Q shard ranges answered in ONE device pass.
+
+        Every reader's [lo, hi] interval resolves at the same registered
+        snapshot, so all shards observe one consistent epoch regardless of
+        concurrent ingest (the paper's streaming-analytics scan, batched
+        across consumers instead of loop-per-consumer)."""
+        return uruv_batch.bulk_range_all(
+            self.store, [lo for lo, _ in bounds], [hi for _, hi in bounds],
+            snap, scan_leaves=32, max_rounds=8,
         )
-        return out
 
     def retire_below(self, sample_id: int, batch_width: int = 256) -> None:
         snap = self.epoch_view()
-        items = self.read_shard(0, sample_id - 1, snap)
-        self.release(snap)
+        try:
+            items = self.read_shard(0, sample_id - 1, snap)
+        finally:
+            self.release(snap)
         ids = np.array([k for k, _ in items], np.int32)
         for i in range(0, len(ids), batch_width):
             chunk = ids[i : i + batch_width]
@@ -130,8 +145,10 @@ class StreamingSampleStore:
 
     def live_count(self) -> int:
         snap = self.epoch_view()
-        items = self.read_shard(0, 2**31 - 3, snap)
-        self.release(snap)
+        try:
+            items = self.read_shard(0, 2**31 - 3, snap)
+        finally:
+            self.release(snap)
         return len(items)
 
 

@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the uruv_range kernel (the `xla` backend path)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ref import KEY_MAX, NOT_FOUND, TOMBSTONE
+
+
+@functools.partial(jax.jit, static_argnames=("max_chain",))
+def range_scan_ref(
+    lids, pvalid, k1, k2, snap_ts,
+    leaf_keys, leaf_vhead, leaf_count, ver_ts, ver_next, ver_value,
+    *, max_chain: int = 16,
+):
+    """Same contract as uruv_range.range_scan: (cand_keys, cand_vals) [Q, S*L]."""
+    Q, S = lids.shape
+    L = leaf_keys.shape[1]
+    rows = leaf_keys[lids]                                 # [Q, S, L]
+    vhs = leaf_vhead[lids]
+    cnt = leaf_count[lids]
+    slot_ok = jnp.arange(L, dtype=jnp.int32)[None, None, :] < cnt[..., None]
+    cand = (
+        pvalid[..., None] & slot_ok
+        & (rows >= k1[:, None, None]) & (rows <= k2[:, None, None])
+    )
+    cur = jnp.where(cand, vhs, -1)
+    snap = jnp.broadcast_to(snap_ts[:, None, None], cur.shape)
+    for _ in range(max_chain):
+        safe = jnp.maximum(cur, 0)
+        adv = (cur >= 0) & (ver_ts[safe] > snap)
+        cur = jnp.where(adv, ver_next[safe], cur)
+    safe = jnp.maximum(cur, 0)
+    ok = (cur >= 0) & (ver_ts[safe] <= snap)
+    val = jnp.where(ok, ver_value[safe], NOT_FOUND)
+    val = jnp.where(val == TOMBSTONE, NOT_FOUND, val)
+    hit = cand & (val != NOT_FOUND)
+    cand_keys = jnp.where(hit, rows, KEY_MAX).reshape(Q, S * L)
+    cand_vals = jnp.where(hit, val, NOT_FOUND).reshape(Q, S * L)
+    return cand_keys, cand_vals

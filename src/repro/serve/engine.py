@@ -223,10 +223,27 @@ class Engine:
                 break
         return requests
 
-    # scheduler view: consistent snapshot of in-flight work
+    # scheduler view: consistent snapshot of in-flight work.  One
+    # `bulk_range` device pass serves the whole table (in-pass pagination;
+    # no host round-trip per page), at a registered snapshot so concurrent
+    # admissions/completions never perturb the view.
     def snapshot_view(self) -> List[Tuple[int, int]]:
+        return self.snapshot_views([(0, 2**31 - 3)])[0]
+
+    def snapshot_views(self, bounds: List[Tuple[int, int]]
+                       ) -> List[List[Tuple[int, int]]]:
+        """N schedulers' key-range views in ONE batched device pass.
+
+        All intervals share a single registered snapshot, so every consumer
+        sees the same consistent table state (the "millions of users"
+        surface: one `bulk_range` call, Q = len(bounds))."""
         self.table, snap = uruv_store.snapshot(self.table)
-        self.table, items = uruv_batch.range_query_all(
-            self.table, 0, 2**31 - 3, int(snap))
-        self.table = uruv_store.release(self.table, int(snap))
-        return items
+        try:
+            views = uruv_batch.bulk_range_all(
+                self.table, [lo for lo, _ in bounds], [hi for _, hi in bounds],
+                int(snap), scan_leaves=32, max_rounds=8)
+        finally:
+            # release even on CapacityError: a leaked registration would pin
+            # min_active_ts and starve compact() forever
+            self.table = uruv_store.release(self.table, int(snap))
+        return views

@@ -120,7 +120,13 @@ def test_engine_generates_and_reuses_prefix(tiny_engine_setup):
     eng.run([r2])
     assert r1.out == outs_ref[0]
     assert r2.out == outs_ref[1], "prefix reuse changed generation output"
-    assert len(eng.snapshot_view()) > 0
+    view = eng.snapshot_view()
+    assert len(view) > 0
+    # batched fan-out: N bounded views at ONE snapshot tile the full view
+    mid = view[len(view) // 2][0]
+    lo_v, hi_v = eng.snapshot_views([(0, mid), (mid + 1, 2**31 - 3)])
+    assert lo_v + hi_v == view
+    assert not bool(np.asarray(eng.table.trk_active).any())  # all released
 
 
 def test_engine_continuous_batching(tiny_engine_setup):

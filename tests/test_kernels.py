@@ -4,10 +4,11 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.core.ref import KEY_MAX
+from repro.core.ref import KEY_MAX, NOT_FOUND
 from repro.kernels.uruv_search.uruv_search import leaf_slots, search_positions
 from repro.kernels.uruv_search.ref import leaf_slots_ref, search_positions_ref
 from repro.kernels.uruv_search.ops import locate
+from repro.kernels.uruv_range.ops import range_scan
 from repro.kernels.versioned_read.versioned_read import versioned_read
 from repro.kernels.versioned_read.ref import versioned_read_ref
 from repro.kernels.flash_attention.flash_attention import flash_attention
@@ -75,6 +76,58 @@ def test_versioned_read_sweep(MV, P, chain):
                            jnp.asarray(ts), jnp.asarray(nxt),
                            jnp.asarray(val), max_chain=chain)
     np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("Q,Sw,ML,L,MV,chain,bq", [
+    (16, 2, 64, 8, 256, 4, 8),
+    (100, 4, 128, 16, 1024, 8, 32),
+    (257, 3, 64, 8, 512, 16, 64),
+])
+def test_range_scan_kernel_sweep(Q, Sw, ML, L, MV, chain, bq):
+    """uruv_range pallas (interpret) vs the pure-jnp oracle on random
+    pools: same candidate keys AND snapshot-resolved values."""
+    lkeys = np.sort(RNG.integers(0, 1000, (ML, L)), axis=1).astype(np.int32)
+    lvh = RNG.integers(-1, MV, (ML, L)).astype(np.int32)
+    lcnt = RNG.integers(0, L + 1, ML).astype(np.int32)
+    vts = RNG.integers(0, 60, MV).astype(np.int32)
+    vnxt = RNG.integers(-1, MV, MV).astype(np.int32)
+    vval = RNG.integers(-2, 99, MV).astype(np.int32)   # includes NOT_FOUND-ish
+    lids = RNG.integers(0, ML, (Q, Sw)).astype(np.int32)
+    pvalid = RNG.random((Q, Sw)) < 0.8
+    k1 = RNG.integers(0, 1000, Q).astype(np.int32)
+    k2 = (k1 + RNG.integers(-50, 400, Q)).astype(np.int32)  # some inverted
+    snap = RNG.integers(0, 60, Q).astype(np.int32)
+    args = (jnp.asarray(lids), jnp.asarray(pvalid), jnp.asarray(k1),
+            jnp.asarray(k2), jnp.asarray(snap), jnp.asarray(lkeys),
+            jnp.asarray(lvh), jnp.asarray(lcnt), jnp.asarray(vts),
+            jnp.asarray(vnxt), jnp.asarray(vval))
+    gk, gv = range_scan(*args, max_chain=chain, block_q=bq, use_pallas=True,
+                        interpret=True)
+    wk, wv = range_scan(*args, max_chain=chain, use_pallas=False)
+    np.testing.assert_array_equal(gk, wk)
+    np.testing.assert_array_equal(gv, wv)
+
+
+def test_bulk_range_backend_parity_end_to_end():
+    """store.bulk_range: pallas_interpret backend == xla backend on a real
+    store (keys, values, counts, truncation flags, resume points)."""
+    from repro.core import store as S
+    from repro.core import batch as B
+
+    st = S.create(S.UruvConfig(leaf_cap=8, max_leaves=128, max_versions=4096))
+    keys = RNG.choice(500, 120, replace=False).astype(np.int32)
+    for i in range(0, 120, 16):
+        st, _ = B.apply_updates(st, keys[i:i+16], keys[i:i+16] % 97)
+    ts = int(st.ts)
+    k1 = RNG.integers(0, 500, 32).astype(np.int32)
+    k2 = (k1 + RNG.integers(-20, 200, 32)).astype(np.int32)
+    snap = np.full(32, ts, np.int32)
+    a = S.bulk_range(st, k1, k2, snap, max_results=32, scan_leaves=2,
+                     max_rounds=3, backend="xla")
+    b = S.bulk_range(st, k1, k2, snap, max_results=32, scan_leaves=2,
+                     max_rounds=3, backend="pallas_interpret")
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 
 @pytest.mark.parametrize("B,H,KVH,S,D,causal,win,dtype", [

@@ -1,0 +1,505 @@
+"""Range-search + snapshot correctness battery for `store.bulk_range`.
+
+Covers the PR-2 contract (DESIGN.md Sec 8):
+
+  * oracle equivalence — random interleavings of `bulk_apply` batches and
+    `bulk_range` query arrays against `core.ref.RefStore.range_query`,
+    including tombstoned keys, duplicate keys across pages, and
+    empty/inverted (k1 > k2) intervals.  Hypothesis drives the search when
+    available; a seeded numpy sweep of the same generators always runs so
+    the battery never goes dark in containers without hypothesis.
+  * snapshot isolation — a registered snapshot's results are byte-identical
+    across later updates AND compaction; tracker register/release
+    accounting (min_active_ts, OFLOW_TRACKER) is asserted.
+  * pagination/truncation edges — the resume-from-`resume_k1` contract
+    (page ends with cnt == 0, exactly == max_results hits, window closing
+    one leaf before k2) that `range_query_all` relied on pre-rewrite.
+  * one-pass guard — Q=256 mixed-width intervals answered with exactly one
+    jitted device pass (no host sync between queries).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import batch as B
+from repro.core import store as S
+from repro.core.ref import (
+    KEY_MAX, NOT_FOUND, TOMBSTONE,
+    OP_DELETE, OP_INSERT, OP_NOP, OP_RANGE, OP_SEARCH, RefStore,
+)
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as hst
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+CFG = S.UruvConfig(leaf_cap=8, max_leaves=512, max_versions=1 << 14,
+                   max_chain=32, tracker_cap=8)
+KEYSPACE = 120
+
+
+def _build(history):
+    """Apply a history of op batches to both the store and the oracle."""
+    st = S.create(CFG)
+    ref = RefStore()
+    for ops in history:
+        st, res = B.apply_batch(st, ops)
+        assert res == ref.apply_batch(ops)
+    return st, ref
+
+
+def _check_queries(st, ref, intervals, snap_ts, **budgets):
+    """bulk_range over all intervals at once == oracle per interval."""
+    k1 = np.array([a for a, _ in intervals], np.int32)
+    k2 = np.array([b for _, b in intervals], np.int32)
+    pages = B.bulk_range_all(st, k1, k2, snap_ts, **budgets)
+    for q, (a, b) in enumerate(intervals):
+        want = ref.range_query(int(a), int(b), int(snap_ts))
+        assert pages[q] == want, (q, a, b, pages[q][:4], want[:4])
+
+
+def _random_history(rng, n_batches):
+    history = []
+    for _ in range(n_batches):
+        n = int(rng.integers(1, 24))
+        codes = rng.choice(
+            [OP_INSERT, OP_INSERT, OP_INSERT, OP_DELETE, OP_SEARCH, OP_NOP], n
+        )
+        history.append([
+            (int(c), int(rng.integers(0, KEYSPACE)), int(rng.integers(0, 1000)))
+            for c in codes
+        ])
+    return history
+
+
+def _random_intervals(rng, q):
+    out = []
+    for _ in range(q):
+        a, b = int(rng.integers(0, KEYSPACE)), int(rng.integers(0, KEYSPACE))
+        if rng.random() < 0.8 and a > b:
+            a, b = b, a                       # keep ~20% inverted intervals
+        out.append((a, b))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# oracle equivalence (always-on seeded sweep)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_random_interleaving_vs_oracle(seed):
+    """Interleave update batches with bulk_range arrays; every interleaving
+    point must match the oracle at the CURRENT clock (tombstones dropped,
+    duplicates collapse to the per-snapshot resolved version)."""
+    rng = np.random.default_rng(seed)
+    st = S.create(CFG)
+    ref = RefStore()
+    for it in range(5):
+        for ops in _random_history(rng, 2):
+            st, res = B.apply_batch(st, ops)
+            assert res == ref.apply_batch(ops)
+        _check_queries(st, ref, _random_intervals(rng, 8), int(st.ts),
+                       max_results=16, scan_leaves=2, max_rounds=2)
+    S.check_invariants(st)
+
+
+def test_duplicate_keys_across_pages_and_tombstones():
+    """Overwritten + tombstoned keys spread across many pages: pagination
+    must not duplicate or resurrect anything."""
+    st = S.create(CFG)
+    ref = RefStore()
+    keys = np.arange(0, 100, dtype=np.int32)
+    for _ in range(3):                        # 3 generations of overwrites
+        for i in range(0, 100, 16):
+            ops = [(OP_INSERT, int(k), int(k * 7 % 91)) for k in keys[i:i+16]]
+            st, _ = B.apply_batch(st, ops)
+            ref.apply_batch(ops)
+    dels = [(OP_DELETE, int(k), 0) for k in keys[::3]]
+    st, _ = B.apply_batch(st, dels)
+    ref.apply_batch(dels)
+    # tiny page budget forces many resume rounds over the duplicate chains
+    _check_queries(st, ref, [(0, 99), (10, 11), (33, 32)], int(st.ts),
+                   max_results=4, scan_leaves=1, max_rounds=1)
+
+
+def test_empty_and_inverted_intervals():
+    st = S.create(CFG)
+    ref = RefStore()
+    ops = [(OP_INSERT, k, k) for k in (10, 20, 30)]
+    st, _ = B.apply_batch(st, ops)
+    ref.apply_batch(ops)
+    intervals = [(31, 9), (11, 19), (0, 9), (21, 29), (30, 10), (15, 15)]
+    _check_queries(st, ref, intervals, int(st.ts))
+    # device-level flags: empty/inverted queries are complete, not truncated
+    k1 = np.array([a for a, _ in intervals], np.int32)
+    k2 = np.array([b for _, b in intervals], np.int32)
+    _, _, cnt, trunc, _ = S.bulk_range(st, k1, k2, int(st.ts))
+    assert np.asarray(cnt).tolist() == [0, 0, 0, 0, 0, 0]
+    assert not np.asarray(trunc).any()
+
+
+def test_mixed_announce_with_op_range_vs_oracle():
+    """RANGEQUERY rides the mixed announce array: op i's count reflects
+    exactly the in-batch ops before it (per-op snapshot = base + i)."""
+    st = S.create(CFG)
+    ref = RefStore()
+    ops = [
+        (OP_RANGE, 0, 50, ),
+        (OP_INSERT, 10, 1),
+        (OP_INSERT, 20, 2),
+        (OP_RANGE, 0, 50),        # sees 10 and 20
+        (OP_DELETE, 10, 0),
+        (OP_RANGE, 0, 50),        # 20 only
+        (OP_RANGE, 50, 0),        # inverted -> 0
+        (OP_INSERT, 10, 3),
+        (OP_RANGE, 0, 50),        # 10 back
+        (OP_SEARCH, 10, 0),
+    ]
+    st, res = B.apply_batch(st, ops)
+    assert res == ref.apply_batch(ops)
+    assert res[0] == 0 and res[3] == 2 and res[5] == 1
+    assert res[6] == 0 and res[8] == 2 and res[9] == 3
+    assert int(st.ts) == ref.ts
+
+
+# ---------------------------------------------------------------------------
+# hypothesis battery (skipped where hypothesis is unavailable)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    op_st = hst.tuples(
+        hst.sampled_from(
+            [OP_INSERT, OP_INSERT, OP_INSERT, OP_DELETE, OP_SEARCH, OP_RANGE]
+        ),
+        hst.integers(0, KEYSPACE - 1),
+        hst.integers(0, KEYSPACE - 1),
+    )
+    batch_st = hst.lists(op_st, min_size=1, max_size=20)
+    history_st = hst.lists(batch_st, min_size=1, max_size=5)
+    interval_st = hst.lists(
+        hst.tuples(hst.integers(0, KEYSPACE - 1),
+                   hst.integers(0, KEYSPACE - 1)),
+        min_size=1, max_size=8,
+    )
+    HSET = settings(
+        max_examples=25, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow,
+                               HealthCheck.data_too_large],
+    )
+
+    @given(history_st, interval_st)
+    @HSET
+    def test_hypothesis_history_then_bulk_range(history, intervals):
+        st, ref = _build(history)
+        _check_queries(st, ref, intervals, int(st.ts),
+                       max_results=8, scan_leaves=1, max_rounds=2)
+
+    @given(history_st, hst.integers(0, 4), interval_st)
+    @HSET
+    def test_hypothesis_snapshot_stability(history, snap_after, intervals):
+        """A registered snapshot's bulk_range answers never change across
+        arbitrary later batches."""
+        st = S.create(CFG)
+        ref = RefStore()
+        snap = want = None
+        for i, ops in enumerate(history):
+            if i == min(snap_after, len(history) - 1) and snap is None:
+                st, ts = S.snapshot(st)
+                snap = int(ts)
+                assert snap == ref.snapshot()
+                want = [ref.range_query(min(a, b), max(a, b), snap)
+                        for a, b in intervals]
+            st, _ = B.apply_batch(st, ops)
+            ref.apply_batch(ops)
+        if snap is not None:
+            k1 = np.array([min(a, b) for a, b in intervals], np.int32)
+            k2 = np.array([max(a, b) for a, b in intervals], np.int32)
+            got = B.bulk_range_all(st, k1, k2, snap,
+                                   max_results=8, scan_leaves=1, max_rounds=2)
+            assert got == want
+
+
+# ---------------------------------------------------------------------------
+# snapshot isolation + tracker accounting
+# ---------------------------------------------------------------------------
+
+def test_snapshot_results_byte_identical_across_updates():
+    st = S.create(CFG)
+    ref = RefStore()
+    ops = [(OP_INSERT, k, k * 2) for k in range(0, 60, 2)]
+    st, _ = B.apply_batch(st, ops)
+    ref.apply_batch(ops)
+    st, snap = S.snapshot(st)
+    rsnap = ref.snapshot()
+    assert int(snap) == rsnap
+    k1 = np.array([0, 10, 30], np.int32)
+    k2 = np.array([59, 20, 31], np.int32)
+    before = S.bulk_range(st, k1, k2, int(snap), max_results=64)
+    before_np = [np.asarray(x).copy() for x in before]
+    # mutate heavily: overwrites, deletes, new keys (structural churn)
+    for gen in range(3):
+        ops = ([(OP_INSERT, k, 999 - k) for k in range(0, 60, 2)]
+               + [(OP_DELETE, k, 0) for k in range(0, 60, 8)]
+               + [(OP_INSERT, k, gen) for k in range(61, 90, 2)])
+        st, _ = B.apply_batch(st, ops)
+        ref.apply_batch(ops)
+    after = S.bulk_range(st, k1, k2, int(snap), max_results=64)
+    for b, a in zip(before_np, after):
+        np.testing.assert_array_equal(b, np.asarray(a))   # byte-identical
+    # and both equal the oracle at the snapshot
+    pages = B.bulk_range_all(st, k1, k2, int(snap))
+    for q in range(3):
+        assert pages[q] == ref.range_query(int(k1[q]), int(k2[q]), rsnap)
+    # the CURRENT clock sees the new world
+    now = B.bulk_range_all(st, k1, k2, int(st.ts))
+    assert now[0] == ref.range_query(0, 59, ref.ts)
+    assert now[0] != pages[0]
+    st = S.release(st, int(snap))
+    ref.release(rsnap)
+
+
+def test_tracker_accounting_and_oflow_ring_exhaustion():
+    st = S.create(CFG)                        # tracker_cap = 8
+    base_ts = int(st.ts)
+    snaps = []
+    for i in range(CFG.tracker_cap):
+        st, s = S.snapshot(st)
+        snaps.append(int(s))
+        assert int(S.min_active_ts(st)) == snaps[0]
+        assert int(st.oflow) & S.OFLOW_TRACKER == 0
+    # ring full: the next registration EVICTS the oldest entry and flags it
+    # (OFLOW_TRACKER == "a snapshot lost its GC protection")
+    st, s_over = S.snapshot(st)
+    assert int(st.oflow) & S.OFLOW_TRACKER
+    assert int(S.min_active_ts(st)) == snaps[1]     # snaps[0] unprotected
+    st = S.release(st, snaps[0])                    # evicted: a no-op
+    assert int(S.min_active_ts(st)) == snaps[1]
+    # release in FIFO order advances min_active_ts exactly
+    for i, s in enumerate(snaps[1:-1], start=1):
+        st = S.release(st, s)
+        assert int(S.min_active_ts(st)) == snaps[i + 1]
+    st = S.release(st, snaps[-1])
+    assert int(S.min_active_ts(st)) == int(s_over)
+    st = S.release(st, int(s_over))
+    assert int(S.min_active_ts(st)) == int(st.ts)   # nothing active
+    assert int(st.ts) == base_ts + CFG.tracker_cap + 1
+
+
+def test_compact_never_reclaims_live_snapshot_versions():
+    st = S.create(CFG)
+    ref = RefStore()
+    ops = [(OP_INSERT, k, k + 100) for k in range(40)]
+    st, _ = B.apply_batch(st, ops)
+    ref.apply_batch(ops)
+    st, snap = S.snapshot(st)
+    rsnap = ref.snapshot()
+    want = ref.range_query(0, 39, rsnap)
+    # overwrite everything + delete half AFTER the snapshot, then compact:
+    # the tracker floor (== snap) must retain the snapshot-visible versions
+    ops = ([(OP_INSERT, k, 0) for k in range(40)]
+           + [(OP_DELETE, k, 0) for k in range(0, 40, 2)])
+    st, _ = B.apply_batch(st, ops)
+    ref.apply_batch(ops)
+    assert int(S.min_active_ts(st)) == int(snap)
+    st, n_live = S.compact(st)
+    got = B.bulk_range_all(st, [0], [39], int(snap))[0]
+    assert got == want, "compact reclaimed versions a live snapshot reads"
+    S.check_invariants(st)
+    # release, compact again: now the old versions are reclaimable and the
+    # snapshot view legitimately disappears
+    st = S.release(st, int(snap))
+    n_before = int(st.n_vers)
+    st, _ = S.compact(st)
+    assert int(st.n_vers) < n_before
+    now = B.bulk_range_all(st, [0], [39], int(st.ts))[0]
+    assert now == ref.range_query(0, 39, ref.ts)
+
+
+# ---------------------------------------------------------------------------
+# pagination / truncation edges (the pre-rewrite `pragma: no cover` branch)
+# ---------------------------------------------------------------------------
+
+def _dense_store(n=200, leaf_cap=8):
+    cfg = S.UruvConfig(leaf_cap=leaf_cap, max_leaves=256,
+                       max_versions=1 << 14, max_chain=16)
+    st = S.create(cfg)
+    ref = RefStore()
+    keys = np.arange(0, n, dtype=np.int32)
+    for i in range(0, n, 16):
+        ops = [(OP_INSERT, int(k), int(k) * 3) for k in keys[i:i+16]]
+        st, _ = B.apply_batch(st, ops)
+        ref.apply_batch(ops)
+    return st, ref
+
+
+def test_page_ends_with_zero_hits_still_progresses():
+    """A window whose leaves hold NO in-interval keys (cnt == 0, truncated)
+    must resume past the scanned leaves, not stall or skip."""
+    st, ref = _dense_store()
+    # delete a long prefix of the interval so early pages are all-tombstone
+    dels = [(OP_DELETE, k, 0) for k in range(10, 120)]
+    st, _ = B.apply_batch(st, dels)
+    ref.apply_batch(dels)
+    ts = int(st.ts)
+    k, v, cnt, trunc, resume = S.bulk_range(
+        st, np.array([10], np.int32), np.array([150], np.int32), ts,
+        max_results=64, scan_leaves=1, max_rounds=1,
+    )
+    assert int(cnt[0]) == 0 and bool(trunc[0])         # the cnt==0 page
+    assert int(resume[0]) > 10                          # progressed by leaves
+    got = B.bulk_range_all(st, [10], [150], ts,
+                           max_results=64, scan_leaves=1, max_rounds=1)[0]
+    assert got == ref.range_query(10, 150, ref.ts)
+
+
+def test_page_hits_exactly_max_results():
+    """cnt == max_results with the window already closed: NOT truncated;
+    with more interval left: truncated and resumable."""
+    st, ref = _dense_store(n=64)
+    ts = int(st.ts)
+    # exactly 8 hits in [0, 7], window closes within budget -> complete page
+    k, v, cnt, trunc, resume = S.bulk_range(
+        st, np.array([0], np.int32), np.array([7], np.int32), ts,
+        max_results=8, scan_leaves=4, max_rounds=4,
+    )
+    assert int(cnt[0]) == 8 and not bool(trunc[0])
+    # 8 hits fill the block but [0, 20] has more -> truncated, resume = 8
+    k, v, cnt, trunc, resume = S.bulk_range(
+        st, np.array([0], np.int32), np.array([20], np.int32), ts,
+        max_results=8, scan_leaves=4, max_rounds=4,
+    )
+    assert int(cnt[0]) == 8 and bool(trunc[0])
+    assert int(resume[0]) == int(np.asarray(k)[0, 7]) + 1
+    got = B.bulk_range_all(st, [0], [20], ts, max_results=8)[0]
+    assert got == ref.range_query(0, 20, ref.ts)
+
+
+def test_window_closes_one_leaf_before_k2():
+    """The scan window ends exactly one leaf short of k2: truncated with
+    resume at the first unscanned separator (no key skipped/duplicated)."""
+    st, ref = _dense_store(n=64, leaf_cap=8)
+    ts = int(st.ts)
+    s = jnp.asarray(st.dir_keys)
+    n_leaves = int(st.n_leaves)
+    assert n_leaves >= 4
+    # k2 = last key of leaf 2; scan budget covers leaves 0..1 only
+    k2 = int(np.asarray(st.dir_keys)[3]) - 1
+    k, v, cnt, trunc, resume = S.bulk_range(
+        st, np.array([0], np.int32), np.array([k2], np.int32), ts,
+        max_results=64, scan_leaves=1, max_rounds=2,
+    )
+    assert bool(trunc[0])
+    assert int(resume[0]) == int(np.asarray(st.dir_keys)[2])
+    ks = np.asarray(k)[0, :int(cnt[0])]
+    assert ks.max() < int(resume[0])
+    got = B.bulk_range_all(st, [0], [k2], ts,
+                           max_results=64, scan_leaves=1, max_rounds=2)[0]
+    assert got == ref.range_query(0, k2, ref.ts)
+
+
+def test_legacy_range_query_all_contract_preserved():
+    """The rewritten range_query_all keeps the seed contract: complete
+    coverage under tiny budgets + snapshot register/release when snap_ts
+    is None."""
+    st, ref = _dense_store()
+    st, got = B.range_query_all(st, 5, 180, None, max_scan_leaves=2,
+                                max_results=16)
+    rsnap = ref.snapshot()
+    ref.release(rsnap)
+    assert got == ref.range_query(5, 180, rsnap)
+    assert int(st.ts) == ref.ts                 # the None path advanced ts
+    assert not bool(np.asarray(st.trk_active).any())   # and released it
+
+
+def test_op_range_exact_past_max_chain_in_batch():
+    """A range op whose keys gain >= max_chain versions LATER in the same
+    announce array must still count them (segment execution resolves the
+    range before those versions exist; post-hoc resolution would walk past
+    the chain bound and silently drop keys)."""
+    cfg = S.UruvConfig(leaf_cap=8, max_leaves=256, max_versions=1 << 14,
+                       max_chain=8)
+    st = S.create(cfg)
+    ref = RefStore()
+    seed = [(OP_INSERT, k, k) for k in range(8)]
+    st, _ = B.apply_batch(st, seed)
+    ref.apply_batch(seed)
+    ops = [(OP_RANGE, 0, 7, )]
+    for gen in range(cfg.max_chain + 3):      # 11 generations > max_chain
+        ops += [(OP_INSERT, k, gen) for k in range(8)]
+    ops.append((OP_RANGE, 0, 7))
+    st, res = B.apply_batch(st, ops)
+    rres = ref.apply_batch(ops)
+    assert res == rres
+    assert res[0] == 8 and res[-1] == 8
+    # and the mirror case: > max_chain same-key updates BEFORE the range
+    # op in one batch (the range reads the freshest version at depth 0)
+    ops2 = [(OP_INSERT, 3, g) for g in range(cfg.max_chain + 5)]
+    ops2.append((OP_RANGE, 3, 3))
+    ops2.append((OP_SEARCH, 3, 0))
+    st, res2 = B.apply_batch(st, ops2)
+    assert res2 == ref.apply_batch(ops2)
+    assert res2[-2] == 1 and res2[-1] == cfg.max_chain + 4
+    assert int(st.ts) == ref.ts
+
+
+def test_sharded_apply_batch_rejects_op_range():
+    """store.bulk_apply treats unknown codes as NOP, so the sharded CRUD
+    helper must refuse OP_RANGE loudly instead of silently NOPing it
+    (range announce arrays go through make_range_apply)."""
+    from repro.core import sharded as SH
+
+    with pytest.raises(ValueError, match="make_range_apply"):
+        SH.sharded_apply_batch(
+            None, np.array([OP_RANGE], np.int32), np.array([5], np.int32),
+            np.array([9], np.int32), apply_fn=None,
+        )
+
+
+def test_pipeline_read_shards_one_consistent_epoch():
+    """All epoch readers' shard ranges resolve in one batched pass at one
+    snapshot: concurrent ingest never leaks into the epoch, and the shards
+    tile the keyspace exactly."""
+    from repro.data.pipeline import StreamingSampleStore
+
+    store = StreamingSampleStore(CFG)
+    ids = np.arange(100, dtype=np.int32)
+    store.ingest(ids, ids * 10)
+    snap = store.epoch_view()
+    bounds = [(0, 24), (25, 49), (50, 74), (75, 99)]
+    views = store.read_shards(bounds, snap)
+    # later ingest must not appear in the epoch views
+    store.ingest(np.arange(100, 140, dtype=np.int32), np.zeros(40, np.int32))
+    views2 = store.read_shards(bounds, snap)
+    assert views == views2
+    flat = [kv for view in views for kv in view]
+    assert flat == [(int(i), int(i) * 10) for i in ids]
+    store.release(snap)
+
+
+# ---------------------------------------------------------------------------
+# one-pass guard: Q=256 in a single jitted device call
+# ---------------------------------------------------------------------------
+
+def test_q256_single_device_pass(monkeypatch):
+    """256 mixed-width intervals must be answered by exactly ONE
+    _bulk_range device call (no host sync / per-query dispatch)."""
+    st, ref = _dense_store(n=200)
+    rng = np.random.default_rng(9)
+    lo = rng.integers(0, 200, 256).astype(np.int32)
+    width = rng.choice([0, 1, 5, 20, 80], 256)
+    hi = np.minimum(lo + width, 210).astype(np.int32)
+    calls = {"n": 0}
+    orig = S._bulk_range
+    monkeypatch.setattr(
+        S, "_bulk_range",
+        lambda *a, **kw: (calls.__setitem__("n", calls["n"] + 1),
+                          orig(*a, **kw))[1],
+    )
+    ts = int(st.ts)
+    pages = B.bulk_range_all(st, lo, hi, ts,
+                             max_results=256, scan_leaves=8, max_rounds=8)
+    assert calls["n"] == 1, "Q=256 took more than one device pass"
+    for q in range(256):
+        assert pages[q] == ref.range_query(int(lo[q]), int(hi[q]), ref.ts)

@@ -154,6 +154,85 @@ def test_sharded_store_on_4_devices():
     assert "SHARDED_OK" in r.stdout
 
 
+SHARDED_RANGE_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys
+sys.path.insert(0, "src")
+import numpy as np, jax, jax.numpy as jnp
+from repro.compat import make_mesh
+from repro.core import store as S, sharded as SH, batch as B
+from repro.core.ref import RefStore, OP_INSERT, OP_DELETE
+
+mesh = make_mesh((4,), ("data",))
+base = S.UruvConfig(leaf_cap=8, max_leaves=128, max_versions=4096)
+cfg = SH.ShardedConfig(base=base, key_lo=0, key_hi=400)
+st = SH.create(cfg, mesh)
+apply_fn = SH.make_apply(cfg, mesh)
+range_fn = SH.make_range_apply(cfg, mesh, max_results=64, scan_leaves=4,
+                               max_rounds=8)
+single = S.create(base)
+ref = RefStore()
+rng = np.random.default_rng(11)
+snaps = []
+for it in range(6):
+    G = 16
+    codes = rng.choice([OP_INSERT, OP_INSERT, OP_INSERT, OP_DELETE], G).astype(np.int32)
+    keys = rng.integers(0, 400, G).astype(np.int32)
+    vals = rng.integers(0, 1000, G).astype(np.int32)
+    st, res = SH.sharded_apply_batch(st, codes, keys, vals, apply_fn=apply_fn)
+    ops = [(int(c), int(k), int(v)) for c, k, v in zip(codes, keys, vals)]
+    single, sres = B.apply_batch(single, ops)
+    ref.apply_batch(ops)
+    snaps.append(SH.global_ts(st))
+assert SH.global_ts(st) == int(single.ts) == ref.ts
+
+# Q=24 mixed-width intervals (incl. inverted + cross-shard spans), each at
+# its OWN historical snapshot: sharded fan-out/gather must be bit-exact
+# with single-device bulk_range, version-timestamp resolution included.
+Q = 24
+k1 = rng.integers(0, 400, Q).astype(np.int32)
+k2 = (k1 + rng.integers(-30, 300, Q)).astype(np.int32)
+snap = np.array([snaps[i % len(snaps)] for i in range(Q)], np.int32)
+got = range_fn(st, jnp.asarray(k1), jnp.asarray(k2), jnp.asarray(snap))
+want = S.bulk_range(single, k1, k2, snap, max_results=64,
+                    scan_leaves=4, max_rounds=8)
+for name, g, w in zip(("keys", "vals", "count", "trunc", "resume"), got, want):
+    g, w = np.asarray(g), np.asarray(w)
+    if name == "resume":
+        # resume only contracts for truncated queries (the complete-query
+        # sentinel is k2 on both sides, but shard windows may legally
+        # close earlier)
+        t = np.asarray(want[3])
+        np.testing.assert_array_equal(g[t], w[t])
+        continue
+    np.testing.assert_array_equal(g, w, err_msg=name)
+
+# and against the oracle at every snapshot
+for q in range(Q):
+    want_q = (ref.range_query(int(k1[q]), int(k2[q]), int(snap[q]))
+              if k1[q] <= k2[q] else [])
+    c = int(np.asarray(got[2])[q])
+    pairs = list(zip(np.asarray(got[0])[q, :c].tolist(),
+                     np.asarray(got[1])[q, :c].tolist()))
+    if not bool(np.asarray(got[3])[q]):
+        assert pairs == want_q, q
+    else:
+        assert pairs == want_q[:c], q
+print("SHARDED_RANGE_OK")
+"""
+
+
+def test_sharded_range_apply_matches_single_device():
+    r = subprocess.run(
+        [sys.executable, "-c", SHARDED_RANGE_SCRIPT],
+        capture_output=True, text=True, timeout=900,
+        cwd=str(Path(__file__).resolve().parents[1]),
+    )
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "SHARDED_RANGE_OK" in r.stdout
+
+
 DIST_TRAIN_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
