@@ -1,4 +1,4 @@
-.PHONY: check test test-range bench-kernels bench-mixed bench-range
+.PHONY: check test test-range api examples bench-kernels bench-mixed bench-range
 
 check:
 	bash scripts/check.sh
@@ -9,6 +9,16 @@ test:
 test-range:
 	PYTHONPATH=src python -m pytest -x -q tests/test_range_property.py \
 		tests/test_kernels.py tests/test_sharding_dist.py
+
+# the public repro.api surface: OpBatch/Result/client/executors battery
+api:
+	PYTHONPATH=src python -m pytest -x -q tests/test_api.py
+
+# all examples, routed through the Pallas interpret backend; fails on any
+# DeprecationWarning raised from inside src/repro (internals must be
+# fully migrated onto repro.api)
+examples:
+	PYTHONPATH=src python scripts/run_examples.py
 
 bench-kernels:
 	PYTHONPATH=src python -m benchmarks.run --quick --only kernels

@@ -28,13 +28,11 @@ import json
 from pathlib import Path
 
 import numpy as np
-import jax.numpy as jnp
 
 from benchmarks import workloads as W
-from repro.core import batch as B
-from repro.core import store as S
-from repro.core.ref import (
+from repro.api import (
     KEY_MAX, NOT_FOUND, TOMBSTONE, OP_DELETE, OP_INSERT, OP_SEARCH,
+    OpBatch, Uruv, UruvConfig,
 )
 
 WIDTHS = [64, 256, 1024, 4096]
@@ -83,77 +81,67 @@ def table_complexity() -> None:
     keys concentrated in a span of the key space — the narrower the span,
     the more structural inserts collide on the same leaves and the more
     bounded help-rounds the combining layer runs.  Wide spans take the
-    fast path (1 round)."""
+    fast path (1 round) — observable through the client's device-pass
+    counter (``Uruv.stats``)."""
     rng = np.random.default_rng(2)
     base_keys = rng.choice(1_000_000, 100_000, replace=False) \
         .astype(np.int32) * 2           # even keys prefilled
     for span in (1_000_000, 65_536, 8_192, 2_048):
-        st = S.create(S.UruvConfig(leaf_cap=16, max_leaves=1 << 15,
-                                   max_versions=1 << 19))
+        db = Uruv(UruvConfig(leaf_cap=16, max_leaves=1 << 15,
+                             max_versions=1 << 19))
         for i in range(0, 100_000, 4096):
-            st, _ = B.apply_updates(st, base_keys[i:i+4096],
-                                    base_keys[i:i+4096])
+            db.apply(OpBatch.updates(base_keys[i:i+4096],
+                                     base_keys[i:i+4096]))
         new = (rng.choice(span // 2, 1024, replace=False)
                .astype(np.int32) * 2 + 1)      # odd keys: all new
-        calls = {"n": 0}
-        orig = S.bulk_apply
-
-        def counting(*a, **kw):
-            calls["n"] += 1
-            return orig(*a, **kw)
-
-        S.bulk_apply = counting
-        try:
-            st, _ = B.apply_updates(st, new, new)
-        finally:
-            S.bulk_apply = orig
-        emit(f"complexity_span{span}_passes", float(calls["n"]),
-             f"{calls['n']}rounds")
+        before = db.stats["device_passes"]
+        db.apply(OpBatch.updates(new, new))
+        passes = db.stats["device_passes"] - before
+        emit(f"complexity_span{span}_passes", float(passes),
+             f"{passes}rounds")
 
 
 def kernels(quick: bool = False) -> None:
     rng = np.random.default_rng(3)
-    st = W.prefill_uruv(rng)
+    db = W.prefill_uruv(rng)
     q = rng.integers(0, W.UNIVERSE, 4096).astype(np.int32)
-    sec = W.timed(lambda: S.bulk_lookup(
-        st, jnp.asarray(q),
-        jnp.asarray(int(st.ts), jnp.int32)).block_until_ready())
+    ts = db.ts
+    sec = W.timed(lambda: db.lookup(q, ts))    # np round-trip == block
     emit("kernel_locate_resolve_4096", sec * 1e6,
          f"{4096/sec/1e6:.2f}Mlookups/s")
-    ts = int(st.ts)
-    sec = W.timed(lambda: S.range_query(
-        st, 100_000, 101_000, ts, max_scan_leaves=64,
-        max_results=2048)[0].block_until_ready())
+    sec = W.timed(lambda: db.scan_page(
+        100_000, 101_000, ts, max_scan_leaves=64,
+        max_results=2048).keys.block_until_ready())
     emit("kernel_range1k_snapshot", sec * 1e6, "1scan")
 
 
-MIXED_CFG = S.UruvConfig(leaf_cap=64, max_leaves=1 << 13,
-                         max_versions=1 << 19, max_chain=64)
+MIXED_CFG = UruvConfig(leaf_cap=64, max_leaves=1 << 13,
+                       max_versions=1 << 19, max_chain=64)
 MIXED_RESIDENT = 200_000
 
 
-def _two_pass_apply(st, codes, keys, vals):
+def _two_pass_apply(db: Uruv, codes, keys, vals):
     """The pre-bulk_apply execution path (seed `batch.apply_batch`): one
     device pass for INSERT/DELETE, a host sync, a second device pass for
     SEARCH at per-op snapshots, host-side result assembly.  The update pass
     runs with ``light_path=False`` — the seed rebuilt the structure
     unconditionally (validated against the actual seed checkout)."""
     n = len(codes)
-    base = int(st.ts)
+    base = db.ts
     upd_mask = (codes == OP_INSERT) | (codes == OP_DELETE)
     ukeys = np.where(upd_mask, keys, KEY_MAX).astype(np.int32)
     uvals = np.where(codes == OP_DELETE, TOMBSTONE, vals).astype(np.int32)
-    st, prev, ok = S.bulk_update(st, jnp.asarray(ukeys), jnp.asarray(uvals),
-                                 light_path=False)
-    assert bool(ok), "baseline update pass rejected; resize MIXED_CFG"
+    rounds = db.stats["slow_path_rounds"]
+    res_u = db.apply(OpBatch.updates(ukeys, uvals), light_path=False)
+    assert db.stats["slow_path_rounds"] == rounds, \
+        "baseline update pass rejected; resize MIXED_CFG"
     results = np.full(n, NOT_FOUND, np.int64)
-    results[upd_mask] = np.asarray(prev)[upd_mask]
+    results[upd_mask] = res_u.values[upd_mask]
     smask = codes == OP_SEARCH
     skeys = np.where(smask, keys, KEY_MAX).astype(np.int32)
     snaps = (base + np.arange(n)).astype(np.int32)
-    sv = S.bulk_lookup(st, jnp.asarray(skeys), jnp.asarray(snaps))
-    results[smask] = np.asarray(sv)[smask]
-    return st, results
+    results[smask] = db.lookup(skeys, snaps)[smask]
+    return results
 
 
 def mixed(quick: bool = False, out_path: str = "BENCH_mixed.json") -> None:
@@ -161,15 +149,16 @@ def mixed(quick: bool = False, out_path: str = "BENCH_mixed.json") -> None:
 
     Workload: 90% SEARCH / 5% INSERT / 5% DELETE over a resident working
     set (updates overwrite live keys — the serving-table traffic pattern).
-    Both paths produce bit-identical announce-order results; the fused path
-    is ONE device call per batch."""
+    Both paths run through the `repro.api` client and produce bit-identical
+    announce-order results; the fused path is ONE device call per batch
+    (asserted via the client's device-pass counter)."""
     rng = np.random.default_rng(5)
-    st0 = S.create(MIXED_CFG)
+    db0 = Uruv(MIXED_CFG)
     resident = rng.choice(W.UNIVERSE, MIXED_RESIDENT,
                           replace=False).astype(np.int32)
     for i in range(0, MIXED_RESIDENT, 4096):
-        st0, _ = B.apply_updates(st0, resident[i:i+4096],
-                                 resident[i:i+4096] % 1000 + 1)
+        db0.apply(OpBatch.updates(resident[i:i+4096],
+                                  resident[i:i+4096] % 1000 + 1))
     widths = [1024] if quick else [1024, 4096]
     report = {}
     for width in widths:
@@ -185,30 +174,31 @@ def mixed(quick: bool = False, out_path: str = "BENCH_mixed.json") -> None:
             vals = (keys % 1000 + 1).astype(np.int32)
             batches.append((codes, keys, vals))
 
-        # the two paths must agree before we time them
-        _, res_f, ok_f = S.bulk_apply(st0, *batches[0])
-        _, res_t = _two_pass_apply(st0, *batches[0])
-        assert bool(ok_f) and np.asarray(res_f).tolist() == res_t.tolist(), \
+        # the two paths must agree before we time them — and the fused
+        # client path must stay ONE device pass (the PR-1 guard)
+        db_chk = Uruv.from_store(db0.store)
+        passes = db_chk.stats["device_passes"]
+        res_f = db_chk.apply(OpBatch(*batches[0]))
+        assert db_chk.stats["device_passes"] == passes + 1, \
+            "client fast path issued more than one device pass"
+        db_chk2 = Uruv.from_store(db0.store)
+        res_t = _two_pass_apply(db_chk2, *batches[0])
+        assert res_f.values.tolist() == res_t.tolist(), \
             "fused and two-pass paths disagree"
 
-        hold_f = {"st": st0}
+        db_f = Uruv.from_store(db0.store)
 
         def run_fused():
-            st = hold_f["st"]
             for c, k, v in batches:
-                st, res, _ = S.bulk_apply(st, c, k, v)
-                np.asarray(res)
-            hold_f["st"] = st
+                db_f.apply(OpBatch(c, k, v))
 
         fsec = W.timed(run_fused) / len(batches)
 
-        hold_t = {"st": st0}
+        db_t = Uruv.from_store(db0.store)
 
         def run_two_pass():
-            st = hold_t["st"]
             for c, k, v in batches:
-                st, _ = _two_pass_apply(st, c, k, v)
-            hold_t["st"] = st
+                _two_pass_apply(db_t, c, k, v)
 
         tsec = W.timed(run_two_pass) / len(batches)
         emit(f"mixed_fused_w{width}", fsec * 1e6,
@@ -224,27 +214,29 @@ def mixed(quick: bool = False, out_path: str = "BENCH_mixed.json") -> None:
     Path(out_path).write_text(json.dumps(report, indent=2) + "\n")
 
 
-RANGE_CFG = S.UruvConfig(leaf_cap=64, max_leaves=1 << 13,
-                         max_versions=1 << 19, max_chain=64)
+RANGE_CFG = UruvConfig(leaf_cap=64, max_leaves=1 << 13,
+                       max_versions=1 << 19, max_chain=64)
 RANGE_RESIDENT = 100_000
 RANGE_UNIVERSE = 1_000_000
 
 
-def _host_paged_ranges(st, k1s, k2s, ts, *, max_scan_leaves, max_results):
-    """The pre-bulk_range serving shape: one jitted `range_query` call per
+def _host_paged_ranges(db: Uruv, k1s, k2s, ts, *, max_scan_leaves,
+                       max_results):
+    """The pre-bulk_range serving shape: one jitted `scan_page` call per
     interval, host sync per page, resume from last key + 1 (the seed
     `range_query_all` loop, batched over queries by a host for-loop)."""
     out = []
     for a, b in zip(k1s, k2s):
         lo, items = int(a), []
         while True:
-            keys, vals, cnt, trunc = S.range_query(
-                st, lo, int(b), ts,
-                max_scan_leaves=max_scan_leaves, max_results=max_results)
-            cnt = int(cnt)
-            k = np.asarray(keys)[:cnt]
-            items.extend(zip(k.tolist(), np.asarray(vals)[:cnt].tolist()))
-            if not bool(trunc):
+            page = db.scan_page(lo, int(b), ts,
+                                max_scan_leaves=max_scan_leaves,
+                                max_results=max_results)
+            cnt = int(page.count[0])
+            k = np.asarray(page.keys)[0, :cnt]
+            items.extend(zip(k.tolist(),
+                             np.asarray(page.values)[0, :cnt].tolist()))
+            if not bool(page.truncated[0]):
                 break
             lo = int(k[-1]) + 1 if cnt else lo + 1
         out.append(items)
@@ -260,13 +252,13 @@ def range_bench(quick: bool = False, out_path: str = "BENCH_range.json") -> None
     paths return identical (key, value) pages; the fused path is ONE
     device call for all Q queries (in-pass pagination)."""
     rng = np.random.default_rng(7)
-    st = S.create(RANGE_CFG)
+    db = Uruv(RANGE_CFG)
     resident = rng.choice(RANGE_UNIVERSE, RANGE_RESIDENT,
                           replace=False).astype(np.int32)
     for i in range(0, RANGE_RESIDENT, 4096):
-        st, _ = B.apply_updates(st, resident[i:i+4096],
-                                resident[i:i+4096] % 1000 + 1)
-    ts = int(st.ts)
+        db.apply(OpBatch.updates(resident[i:i+4096],
+                                 resident[i:i+4096] % 1000 + 1))
+    ts = db.ts
     # both Q points always run (the acceptance evidence in BENCH_range.json
     # covers Q=64 and Q=256); quick mode trims the timing repeats instead
     qs = [64, 256]
@@ -278,20 +270,20 @@ def range_bench(quick: bool = False, out_path: str = "BENCH_range.json") -> None
         k2 = (k1 + widths[np.arange(Q) % len(widths)]).astype(np.int32)
 
         # the two paths must agree before we time them
-        pages = B.bulk_range_all(st, k1, k2, ts, max_results=4096,
-                                 scan_leaves=32, max_rounds=1)
-        paged = _host_paged_ranges(st, k1, k2, ts,
+        pages = db.range_all(k1, k2, ts, max_results=4096,
+                             scan_leaves=32, max_rounds=1)
+        paged = _host_paged_ranges(db, k1, k2, ts,
                                    max_scan_leaves=128, max_results=4096)
         assert pages == paged, "bulk_range and host-paginated loop disagree"
 
         def run_bulk():
-            B.bulk_range_all(st, k1, k2, ts, max_results=4096,
-                             scan_leaves=32, max_rounds=1)
+            db.range_all(k1, k2, ts, max_results=4096,
+                         scan_leaves=32, max_rounds=1)
 
         bsec = W.timed(run_bulk, repeats=repeats[0], warmup=1)
 
         def run_paged():
-            _host_paged_ranges(st, k1, k2, ts,
+            _host_paged_ranges(db, k1, k2, ts,
                                max_scan_leaves=128, max_results=4096)
 
         psec = W.timed(run_paged, repeats=repeats[1], warmup=1)

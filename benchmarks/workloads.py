@@ -12,16 +12,14 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Tuple
+from typing import Callable, Tuple
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.api import KEY_MAX, TOMBSTONE, OpBatch, Uruv, UruvConfig
 from repro.core import baseline as BL
-from repro.core import batch as B
-from repro.core import store as S
-from repro.core.ref import KEY_MAX, TOMBSTONE
 
 
 @dataclasses.dataclass
@@ -49,8 +47,8 @@ FIG9 = {
 
 UNIVERSE = 2_000_000
 PREFILL = 200_000
-STORE_CFG = S.UruvConfig(leaf_cap=64, max_leaves=1 << 14,
-                         max_versions=1 << 21, max_chain=64)
+STORE_CFG = UruvConfig(leaf_cap=64, max_leaves=1 << 14,
+                       max_versions=1 << 21, max_chain=64)
 
 
 def timed(fn: Callable[[], None], repeats: int = 5, warmup: int = 2) -> float:
@@ -65,13 +63,13 @@ def timed(fn: Callable[[], None], repeats: int = 5, warmup: int = 2) -> float:
     return float(np.mean(ts[: max(1, len(ts) - 1)]))   # drop worst (paper: outliers)
 
 
-def prefill_uruv(rng) -> S.UruvStore:
-    st = S.create(STORE_CFG)
+def prefill_uruv(rng) -> Uruv:
+    db = Uruv(STORE_CFG)
     keys = rng.choice(UNIVERSE, PREFILL, replace=False).astype(np.int32)
     for i in range(0, PREFILL, 4096):
-        st, _ = B.apply_updates(st, keys[i:i+4096],
-                                keys[i:i+4096] % 1000 + 1)
-    return st
+        db.apply(OpBatch.updates(keys[i:i+4096],
+                                 keys[i:i+4096] % 1000 + 1))
+    return db
 
 
 def prefill_flat(rng) -> BL.FlatStore:
@@ -96,32 +94,27 @@ def op_batch(rng, w: Workload, width: int):
     return lookup, upd_k, upd_v, n_rq
 
 
-def run_uruv(store: S.UruvStore, rng, w: Workload, width: int,
-             iters: int = 4) -> Tuple[S.UruvStore, float]:
-    """Returns (store, seconds per `width` ops)."""
+def run_uruv(db: Uruv, rng, w: Workload, width: int,
+             iters: int = 4) -> Tuple[Uruv, float]:
+    """Returns (client, seconds per `width` ops)."""
     batches = [op_batch(rng, w, width) for _ in range(iters)]
     rq_starts = rng.integers(0, UNIVERSE - w.range_size,
                              max(1, iters * 8)).astype(np.int32)
 
-    holder = {"st": store}
-
     def body():
-        st = holder["st"]
         k = 0
         for lookup, upd_k, upd_v, n_rq in batches:
-            st, _ = B.apply_updates(st, upd_k, upd_v)
-            ts = int(st.ts)
-            S.bulk_lookup(st, jnp.asarray(lookup),
-                          jnp.asarray(ts, jnp.int32)).block_until_ready()
+            db.apply(OpBatch.updates(upd_k, upd_v))
+            ts = db.ts
+            db.lookup(lookup, ts)          # np round-trip == block
             for _ in range(n_rq):
                 lo = int(rq_starts[k % len(rq_starts)]); k += 1
-                S.range_query(st, lo, lo + w.range_size, ts,
-                              max_scan_leaves=64,
-                              max_results=2048)[0].block_until_ready()
-        holder["st"] = st
+                db.scan_page(lo, lo + w.range_size, ts,
+                             max_scan_leaves=64,
+                             max_results=2048).keys.block_until_ready()
 
     sec = timed(body)
-    return holder["st"], sec / iters
+    return db, sec / iters
 
 
 def run_flat(store: BL.FlatStore, rng, w: Workload, width: int,

@@ -1,51 +1,62 @@
-"""Quickstart: the Uruv ADT in five minutes.
+"""Quickstart: the Uruv ADT in five minutes — through the one front door.
 
   PYTHONPATH=src python examples/quickstart.py
 
-Covers the paper's full ADT — wait-free batched INSERT/DELETE/SEARCH and a
-linearizable RANGEQUERY that is immune to concurrent updates — plus the
-version tracker + compaction (GC).
+Covers the paper's full ADT via `repro.api`: wait-free batched
+INSERT/DELETE/SEARCH, a typed mixed-op plan (`OpBatch`) applied in one
+device pass, and a linearizable RANGEQUERY that is immune to concurrent
+updates — plus the version tracker + compaction (GC).
 """
 
 import numpy as np
-import jax.numpy as jnp
 
-from repro.core import batch as B
-from repro.core import store as S
-from repro.core.ref import NOT_FOUND, TOMBSTONE
+from repro.api import OpBatch, Uruv, UruvConfig
 
 
 def main():
-    st = S.create(S.UruvConfig(leaf_cap=32, max_leaves=4096,
-                               max_versions=1 << 18))
+    db = Uruv(UruvConfig(leaf_cap=32, max_leaves=1024, max_versions=1 << 16))
 
-    # INSERT: one wait-free combining pass applies the whole announce array
-    keys = np.arange(0, 10_000, 2, dtype=np.int32)       # even keys
-    st, _ = B.apply_updates(st, keys, keys * 10)
-    print(f"inserted {len(keys)} keys -> {int(st.n_leaves)} leaves, "
-          f"clock={int(st.ts)}")
+    # INSERT: fixed-width announce batches (the production ingest shape —
+    # one wait-free combining pass each; fixed widths also mean the jitted
+    # pass compiles once and is reused for every batch)
+    keys = np.arange(0, 4_000, 2, dtype=np.int32)        # even keys
+    for i in range(0, len(keys), 64):
+        db.insert(keys[i:i+64], keys[i:i+64] * 10)
+    print(f"inserted {len(keys)} keys -> {int(db.store.n_leaves)} leaves, "
+          f"clock={db.ts}, device passes={db.stats['device_passes']}")
 
-    # SEARCH (batched)
-    q = np.array([0, 2, 3, 9998], np.int32)
-    vals = S.bulk_lookup(st, jnp.asarray(q), jnp.asarray(int(st.ts), jnp.int32))
-    print("search", dict(zip(q.tolist(), np.asarray(vals).tolist())))
+    # SEARCH: read-only probe at the current clock
+    q = np.array([0, 2, 3, 3998], np.int32)
+    print("lookup", dict(zip(q.tolist(), db.lookup(q).tolist())))
 
-    # RANGEQUERY with snapshot isolation: take a snapshot, then overwrite
-    st, snap = S.snapshot(st)
-    st, _ = B.apply_updates(st, keys[:50], keys[:50])    # overwrite values
-    st, old_view = B.range_query_all(st, 0, 100, int(snap))
-    st, new_view = B.range_query_all(st, 0, 100, None)
-    print("snapshot view :", old_view[:5], "(values * 10 — pre-overwrite)")
-    print("latest view   :", new_view[:5], "(overwritten)")
+    # RANGEQUERY with snapshot isolation: register a snapshot, overwrite,
+    # and re-read — the registered view never moves (released on exit)
+    with db.snapshot() as snap:
+        db.insert(keys[:50], keys[:50])                  # overwrite values
+        old_view = db.range(0, 100, snap)
+        new_view = db.range(0, 100)
+        print("snapshot view :", old_view[:5], "(values * 10 — pre-overwrite)")
+        print("latest view   :", new_view[:5], "(overwritten)")
+
+    # One typed plan = one linearized announce array (one device pass per
+    # CRUD segment): searches see earlier in-batch ops, the range op counts
+    # live keys at its own announce timestamp
+    res = db.apply(OpBatch.concat(
+        OpBatch.searches([2, 3]),
+        OpBatch.deletes([2]),
+        OpBatch.ranges([0], [10]),
+        OpBatch.inserts([3], [33]),
+    ))
+    print("plan values   :", res.values.tolist(),
+          "| range page:", res.pages()[0])
 
     # DELETE writes tombstone versions; compact() reclaims them once no
     # active snapshot can see them (the paper's version tracker, App. E)
-    st, _ = B.apply_updates(
-        st, keys[:1000], np.full(1000, TOMBSTONE, np.int32))
-    print(f"versions before GC: {int(st.n_vers)}")
-    st = S.release(st, snap)
-    st, n_live = S.compact(st)
-    print(f"versions after  GC: {int(st.n_vers)} ({int(n_live)} live keys)")
+    for i in range(0, 1000, 64):
+        db.delete(keys[i:i+64])
+    print(f"versions before GC: {int(db.store.n_vers)}")
+    n_live = db.compact()
+    print(f"versions after  GC: {int(db.store.n_vers)} ({n_live} live keys)")
 
 
 if __name__ == "__main__":

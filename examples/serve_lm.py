@@ -2,7 +2,8 @@
 
 Trains a tiny LM briefly (so generations are non-degenerate), then serves
 a burst of requests sharing a common prompt prefix — the second wave hits
-the Uruv prefix table and skips recomputation.
+the Uruv prefix table (a `repro.api.Uruv` client inside the engine) and
+skips recomputation.
 
   PYTHONPATH=src python examples/serve_lm.py
 """
@@ -10,10 +11,8 @@ the Uruv prefix table and skips recomputation.
 import time
 
 import numpy as np
-import jax
 
 from repro.config import get_arch
-from repro.models.registry import get_model
 from repro.serve.engine import Engine, Request
 from repro.train.loop import TrainLoopConfig, train
 
@@ -47,7 +46,12 @@ def main():
 
     burst("wave 1 (cold)", 4)
     burst("wave 2 (prefix-cached)", 4)
-    print(f"prefix-table entries: {len(eng.snapshot_view())}")
+    # the engine's prefix table IS a repro.api.Uruv client: read it through
+    # the same front door — a registered snapshot + one batched range scan
+    with eng.table.snapshot() as snap:
+        entries = eng.table.range(0, 2**31 - 3, snap)
+    print(f"prefix-table entries: {len(entries)} "
+          f"(table device passes: {eng.table.stats['device_passes']})")
 
 
 if __name__ == "__main__":

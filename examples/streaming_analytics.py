@@ -1,61 +1,59 @@
 """Streaming analytics — the paper's motivating scenario (Sec 1).
 
-A producer ingests real-time events into the store while an analytics
-reader repeatedly takes consistent range snapshots ("analytics while
-ingesting", Flurry-style).  Every scan is checked for internal consistency:
-it must reflect exactly the prefix of ingested batches visible at its
-snapshot timestamp — no torn reads, ever.
+A producer ingests real-time events through the `repro.api` client while
+an analytics reader repeatedly takes consistent range snapshots
+("analytics while ingesting", Flurry-style).  Every scan is checked for
+internal consistency: it must reflect exactly the prefix of ingested
+batches visible at its snapshot timestamp — no torn reads, ever.
 
   PYTHONPATH=src python examples/streaming_analytics.py
 """
 
 import numpy as np
 
-from repro.core import batch as B
-from repro.core import store as S
+from repro.api import Uruv, UruvConfig
+
+EPOCHS = 12
+BATCH = 256
+WINDOW = 1000
 
 
 def main():
     rng = np.random.default_rng(0)
-    st = S.create(S.UruvConfig(leaf_cap=32, max_leaves=8192,
-                               max_versions=1 << 19))
+    db = Uruv(UruvConfig(leaf_cap=32, max_leaves=2048, max_versions=1 << 17))
 
     ingested = 0
-    epoch_of_key = {}
-    for epoch in range(20):
-        # producer: 512 new events keyed by arrival index, value = sensor id
-        keys = np.arange(ingested, ingested + 512, dtype=np.int32)
-        vals = rng.integers(0, 100, 512).astype(np.int32)
-        st, _ = B.apply_updates(st, keys, vals)
-        for k in keys:
-            epoch_of_key[int(k)] = epoch
-        ingested += 512
+    for epoch in range(EPOCHS):
+        # producer: BATCH new events keyed by arrival index, value = sensor
+        keys = np.arange(ingested, ingested + BATCH, dtype=np.int32)
+        db.insert(keys, rng.integers(0, 100, BATCH).astype(np.int32))
+        ingested += BATCH
 
-        # reader: consistent scan of the last 2000 events
-        st, snap = S.snapshot(st)
-        lo = max(0, ingested - 2000)
-        st, window = B.range_query_all(st, lo, ingested - 1, int(snap))
+        # reader: consistent scan of the last WINDOW events — the snapshot
+        # context registers the view and releases it on exit
+        lo = max(0, ingested - WINDOW)
+        with db.snapshot() as snap:
+            window = db.range(lo, ingested - 1, snap)
         # consistency check: the scan contains EXACTLY the visible prefix
         got_keys = [k for k, _ in window]
         assert got_keys == list(range(lo, ingested)), "torn read!"
         hist = np.bincount([v for _, v in window], minlength=100)
-        st = S.release(st, snap)
-        if epoch % 5 == 4:
+        if epoch % 4 == 3:
             print(f"epoch {epoch+1:2d}: ingested={ingested:6d} "
                   f"window={len(window)} top-sensor={int(hist.argmax())} "
-                  f"versions={int(st.n_vers)}")
+                  f"versions={int(db.store.n_vers)}")
 
-        # retention: retire events older than 5 epochs, then GC
-        if epoch % 5 == 4 and ingested > 5 * 512:
-            horizon = ingested - 5 * 512
-            old = np.arange(max(0, horizon - 512), horizon, dtype=np.int32)
-            st, _ = B.apply_updates(
-                st, old, np.full(len(old), S.TOMBSTONE, np.int32))
-            st, n_live = S.compact(st)
-            print(f"          GC: {int(n_live)} live events, "
-                  f"versions={int(st.n_vers)}")
+        # retention: retire events older than 4 epochs, then GC
+        if epoch % 4 == 3 and ingested > 4 * BATCH:
+            horizon = ingested - 4 * BATCH
+            db.delete(np.arange(max(0, horizon - BATCH), horizon,
+                                dtype=np.int32))
+            n_live = db.compact()
+            print(f"          GC: {n_live} live events, "
+                  f"versions={int(db.store.n_vers)}")
 
-    print("all scans linearizable; done.")
+    print(f"all scans linearizable; {db.stats['device_passes']} device "
+          "passes total; done.")
 
 
 if __name__ == "__main__":

@@ -13,6 +13,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.api import UruvConfig
 from repro.config import get_arch
 from repro.data.pipeline import StreamingSampleStore
 from repro.train.loop import TrainLoopConfig, train
@@ -48,11 +49,21 @@ def main():
                                total_steps=args.steps, log_every=10,
                                ckpt_every=50, ckpt_dir=args.ckpt_dir)
 
-    # the data pipeline's streaming sample store ingests while we train
-    store = StreamingSampleStore()
-    store.ingest(np.arange(4096, dtype=np.int32),
-                 np.arange(4096, dtype=np.int32))
-    print(f"sample store primed with {store.live_count()} samples")
+    # the data pipeline's streaming sample store (a repro.api.Uruv client)
+    # ingests while we train; verify the primed epoch through the client's
+    # snapshot + range surface
+    n_prime = 1024 if args.demo else 4096
+    store = StreamingSampleStore(
+        UruvConfig(leaf_cap=64, max_leaves=512, max_versions=1 << 15)
+        if args.demo else None
+    )
+    for i in range(0, n_prime, 128):       # fixed-width ingest batches
+        ids = np.arange(i, i + 128, dtype=np.int32)
+        store.ingest(ids, ids)
+    with store.client.snapshot() as snap:
+        primed = len(store.client.range(0, 2**31 - 3, snap))
+    print(f"sample store primed with {primed} samples "
+          f"(clock={store.client.ts})")
 
     from repro.launch.roofline import model_params
     N, _ = model_params(cfg)

@@ -7,10 +7,23 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== api layering gate (non-core modules go through repro.api only) =="
+# import statements only (prose mentions of repro.core.* in docstrings are
+# fine): `from repro.core import store`, `from repro.core.store import ...`,
+# `import repro.core.store`
+if grep -RnE "^[[:space:]]*(from repro\.core import [^#]*\b(store|batch|sharded)\b|from repro\.core\.(store|batch|sharded)\b|import repro\.core\.(store|batch|sharded)\b)" \
+     --include="*.py" --exclude-dir=core --exclude-dir=api \
+     src/repro benchmarks examples scripts; then
+  echo "ERROR: module bypasses repro.api (import core internals directly)"
+  exit 1
+fi
+echo "ok"
+
 echo "== tier-1 tests =="
 # The full suite (pytest -x -q) includes the range/snapshot battery
-# (tests/test_range_property.py) and the kernel + sharded range parity
-# tests (tests/test_kernels.py, tests/test_sharding_dist.py).
+# (tests/test_range_property.py), the kernel + sharded range parity tests
+# (tests/test_kernels.py, tests/test_sharding_dist.py) and the public-API
+# surface battery (tests/test_api.py).
 python -m pytest -x -q
 
 echo "== kernel microbench (quick) =="
@@ -27,3 +40,6 @@ cat BENCH_mixed.json
 
 echo "== BENCH_range.json =="
 cat BENCH_range.json
+
+echo "== examples under pallas_interpret (DeprecationWarning from repro = fail) =="
+python scripts/run_examples.py

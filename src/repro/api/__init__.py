@@ -1,0 +1,56 @@
+"""repro.api — the single public entry point to the Uruv ADT.
+
+Everything outside ``repro.core`` (serving, data, benchmarks, examples)
+talks to the store through this package only:
+
+  * :class:`OpBatch`  — the typed announce-array plan IR (builders:
+    ``inserts/deletes/searches/ranges/updates``, ``concat``, ``pad_to``).
+  * :class:`Result`   — per-op values + found mask + timestamps + complete
+    range pages and resume frontiers.
+  * :class:`Uruv`     — the client: ``apply(batch)``, convenience verbs,
+    ``snapshot()`` context manager, ``range``/``range_all`` pagination,
+    ``compact()``.
+  * :class:`LocalExecutor` / :class:`ShardedExecutor` — pluggable
+    topology backends behind one executor contract (DESIGN.md Sec 9).
+
+Old entry points (``core.batch.apply_updates``, ``core.batch.
+range_query_all``, ``core.store.bulk_update``) are deprecated delegates
+of this API.
+"""
+
+from repro.core.backend import get_backend, set_backend
+from repro.core.batch import CapacityError
+from repro.core.ref import (
+    KEY_MAX, NOT_FOUND, TOMBSTONE,
+    OP_DELETE, OP_INSERT, OP_NOP, OP_RANGE, OP_SEARCH,
+)
+from repro.core.sharded import ShardedConfig
+from repro.core.store import UruvConfig
+
+from repro.api.client import Uruv
+from repro.api.executors import LocalExecutor, RangeOptions, ShardedExecutor
+from repro.api.opbatch import OpBatch, RangePage, Result, make_result
+
+__all__ = [
+    "CapacityError",
+    "KEY_MAX",
+    "LocalExecutor",
+    "NOT_FOUND",
+    "OP_DELETE",
+    "OP_INSERT",
+    "OP_NOP",
+    "OP_RANGE",
+    "OP_SEARCH",
+    "OpBatch",
+    "RangeOptions",
+    "RangePage",
+    "Result",
+    "ShardedConfig",
+    "ShardedExecutor",
+    "TOMBSTONE",
+    "Uruv",
+    "UruvConfig",
+    "get_backend",
+    "make_result",
+    "set_backend",
+]

@@ -1,0 +1,265 @@
+"""`Uruv` — the one front door to the paper's ADT.
+
+One client serves every topology: construct with a `UruvConfig` for a
+single device, with ``Uruv.sharded(cfg, mesh)`` for a key-partitioned
+mesh — every verb below then runs through the pluggable executor without
+the caller ever branching on topology.
+
+    from repro.api import OpBatch, Uruv, UruvConfig
+
+    db = Uruv(UruvConfig(leaf_cap=32))
+    db.insert([1, 2, 3], [10, 20, 30])
+    res = db.apply(OpBatch.concat(
+        OpBatch.searches([2]), OpBatch.deletes([1]), OpBatch.ranges(0, 99),
+    ))                       # one linearized announce array, one device pass
+    with db.snapshot() as ts:            # registered + auto-released
+        page = db.range(0, 99, ts)       # consistent under later updates
+
+The client is the ONLY stateful object in the stack: it holds the current
+store pytree (every prior value remains a valid frozen snapshot — the
+paper's freeze-for-free) and mutates nothing else.  All heavy lifting is
+the executor's; the client adds the announce-order timestamp accounting
+(`Result.timestamps`) and the snapshot-tracker hygiene.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import store as _store
+from repro.core.ref import KEY_MAX
+
+from repro.api.executors import (
+    LocalExecutor, RangeOptions, ShardedExecutor,
+)
+from repro.api.opbatch import OpBatch, RangePage, Result, make_result
+
+
+class Uruv:
+    """Stateful client over an immutable store + a pluggable executor."""
+
+    def __init__(self, config: Optional[_store.UruvConfig] = None, *,
+                 executor=None, store=None, backend: Optional[str] = None):
+        if executor is None:
+            executor = LocalExecutor(config, backend=backend)
+        self.executor = executor
+        self._store = store if store is not None else executor.create()
+
+    # ----------------------------------------------------------- constructors
+    @classmethod
+    def sharded(cls, config, mesh, *, route_factor: int = 2,
+                routed: bool = True, store=None) -> "Uruv":
+        """A client over a key-range-partitioned store on ``mesh`` (the
+        ``config`` is a ``repro.core.sharded.ShardedConfig``)."""
+        return cls(executor=ShardedExecutor(
+            config, mesh, route_factor=route_factor, routed=routed,
+        ), store=store)
+
+    @classmethod
+    def from_store(cls, store, *, backend: Optional[str] = None) -> "Uruv":
+        """Adopt an existing single-device store pytree (zero copies —
+        stores are immutable, so the donor keeps its snapshot)."""
+        return cls(executor=LocalExecutor(store.cfg, backend=backend),
+                   store=store)
+
+    # ----------------------------------------------------------------- state
+    @property
+    def store(self):
+        """The current store pytree (an immutable snapshot)."""
+        return self._store
+
+    @property
+    def config(self):
+        return self.executor.config
+
+    @property
+    def stats(self):
+        """Executor counters: device_passes / slow_path_rounds / compactions."""
+        return self.executor.stats
+
+    @property
+    def ts(self) -> int:
+        """The global clock (the paper's FAA counter)."""
+        return self.executor.ts(self._store)
+
+    @property
+    def active_snapshots(self) -> int:
+        """Registered-and-unreleased snapshots in the version tracker."""
+        act = np.asarray(self._store.trk_active)
+        if act.ndim == 2:        # sharded: the tracker ring is replicated
+            act = act[0]
+        return int(act.sum())
+
+    # ----------------------------------------------------------------- write
+    def apply(self, batch: OpBatch, *, light_path: bool = True,
+              pad_to_pow2: bool = False,
+              range_opts: RangeOptions = RangeOptions()) -> Result:
+        """Linearize one announce array: op i at timestamp ``ts + i``.
+
+        One device pass on the fast path (CRUD-only batches); RANGE ops
+        segment the array (each range snapshots at its own announce
+        timestamp and is answered COMPLETELY).  Capacity rejections retry
+        via the bounded slow path; ``CapacityError`` if the store cannot
+        fit the working set even after compaction.
+
+        ``pad_to_pow2`` NOP-pads the plan to the next power-of-two width
+        before dispatch, bounding jit retraces to O(log max_width) shape
+        buckets for callers with ragged batch sizes (serving admission);
+        results keep the caller's width, but the clock advances by the
+        padded width (NOP slots still occupy announce positions).
+        """
+        base = self.ts
+        n = len(batch)
+        if pad_to_pow2 and n:
+            batch = batch.pad_to(1 << (n - 1).bit_length())
+        self._store, values, range_items = self.executor.apply(
+            self._store, batch, light_path=light_path, range_opts=range_opts,
+        )
+        return make_result(values[:n], np.asarray(batch.codes)[:n], base,
+                           range_items)
+
+    def insert(self, keys, values) -> Result:
+        """Batched INSERT; ``Result.values`` holds the previous values."""
+        return self.apply(OpBatch.inserts(keys, values))
+
+    def delete(self, keys) -> Result:
+        """Batched DELETE (tombstones; physical reclaim via compact())."""
+        return self.apply(OpBatch.deletes(keys))
+
+    def search(self, keys) -> Result:
+        """Batched SEARCH as announce ops (advances the clock; op i sees
+        every earlier in-batch op).  For read-only probes at an explicit
+        snapshot use :meth:`lookup`."""
+        return self.apply(OpBatch.searches(keys))
+
+    # ------------------------------------------------------------------ read
+    def lookup(self, keys, snap_ts=None, *,
+               pad_to_pow2: bool = False) -> np.ndarray:
+        """Read-only batched SEARCH at ``snap_ts`` (default: current clock).
+
+        Does not advance the clock or register a snapshot; padded keys
+        (KEY_MAX) return NOT_FOUND.  ``pad_to_pow2`` bounds jit retraces
+        for ragged probe widths (reads are side-effect free, so padding
+        costs nothing but the wider pass).
+        """
+        if snap_ts is None:
+            snap_ts = self.ts
+        keys = np.atleast_1d(np.asarray(keys, np.int32))
+        n = len(keys)
+        if pad_to_pow2 and n:
+            pad = (1 << (n - 1).bit_length()) - n
+            keys = np.concatenate([keys, np.full(pad, KEY_MAX, np.int32)])
+            snap = np.asarray(snap_ts, np.int32)
+            if snap.ndim:            # per-op snaps pad too (padded keys are
+                snap_ts = np.concatenate(   # KEY_MAX -> NOT_FOUND anyway)
+                    [snap, np.zeros(pad, np.int32)])
+        return np.asarray(self.executor.lookup(
+            self._store, keys, snap_ts,
+        ))[:n]
+
+    def range(self, k1: int, k2: int, snap_ts: Optional[int] = None, *,
+              max_results: int = 1024, scan_leaves: int = 16,
+              max_rounds: int = 8) -> List[Tuple[int, int]]:
+        """[k1, k2] answered completely at one snapshot -> (key, value) list.
+
+        ``snap_ts=None`` registers a fresh snapshot for the duration of
+        the scan (and always releases it — a leaked registration would pin
+        ``min_active_ts`` and starve GC).
+        """
+        return self.range_all([k1], [k2], snap_ts,
+                              max_results=max_results,
+                              scan_leaves=scan_leaves,
+                              max_rounds=max_rounds)[0]
+
+    def range_all(self, k1s, k2s, snap_ts: Optional[int] = None, *,
+                  max_results: int = 1024, scan_leaves: int = 16,
+                  max_rounds: int = 8) -> List[List[Tuple[int, int]]]:
+        """Q intervals answered completely — ONE batched device pass per
+        pagination round shared by ALL still-truncated queries (the pooled
+        in-pass budget of DESIGN.md Sec 8), at one consistent snapshot."""
+        opts = RangeOptions(max_results=max_results,
+                            scan_leaves=scan_leaves, max_rounds=max_rounds)
+        if snap_ts is None:
+            with self.snapshot() as ts:
+                return self.executor.range_all(
+                    self._store, k1s, k2s, ts, opts)
+        return self.executor.range_all(self._store, k1s, k2s, snap_ts, opts)
+
+    def range_page(self, k1s, k2s, snap_ts, *, max_results: int = 1024,
+                   scan_leaves: int = 16, max_rounds: int = 8) -> RangePage:
+        """ONE bounded device pass over Q intervals (the wait-free unit);
+        resume truncated queries from ``page.resume_k1``."""
+        return self.executor.range_page(
+            self._store, k1s, k2s, snap_ts,
+            RangeOptions(max_results=max_results, scan_leaves=scan_leaves,
+                         max_rounds=max_rounds),
+        )
+
+    def scan_page(self, k1: int, k2: int, snap_ts, *,
+                  max_scan_leaves: int = 64,
+                  max_results: int = 1024) -> RangePage:
+        """The paper's single-interval RANGEQUERY pass: exactly
+        ``max_scan_leaves`` chained leaves, one device call (the seed
+        contract; kept as the baseline unit for benchmarks)."""
+        return self.executor.scan_page(
+            self._store, k1, k2, snap_ts,
+            max_scan_leaves=max_scan_leaves, max_results=max_results,
+        )
+
+    # --------------------------------------------------------- snapshots, GC
+    def acquire_snapshot(self) -> int:
+        """Register a snapshot in the version tracker and return its ts.
+        Pair with :meth:`release_snapshot`; prefer :meth:`snapshot`."""
+        self._store, ts = self.executor.snapshot(self._store)
+        return ts
+
+    def release_snapshot(self, snap_ts: int) -> None:
+        self._store = self.executor.release(self._store, snap_ts)
+
+    @contextlib.contextmanager
+    def snapshot(self) -> Iterator[int]:
+        """Registered snapshot as a context manager.
+
+            with db.snapshot() as ts:
+                view = db.range(0, hi, ts)     # immune to later updates
+
+        Released on exit even on error (GC never starves).
+        """
+        ts = self.acquire_snapshot()
+        try:
+            yield ts
+        finally:
+            self.release_snapshot(ts)
+
+    def compact(self) -> int:
+        """Physically reclaim versions no active snapshot can read and
+        repack leaves (paper Appendix E); returns the live-key count."""
+        self._store, n_live = self.executor.compact(self._store)
+        return n_live
+
+    # ------------------------------------------------------------ inspection
+    def live_items(self) -> List[Tuple[int, int]]:
+        """All (key, latest live value) pairs — host-side, O(n); tests."""
+        store = self._store
+        if np.asarray(store.ts).ndim:          # sharded: walk every shard
+            import jax
+
+            shards = [
+                jax.tree.map(lambda x, s=s: x[s], store)
+                for s in range(np.asarray(store.ts).shape[0])
+            ]
+            out = []
+            for sh in shards:
+                out.extend(_store.live_items(sh))
+            return sorted(out)
+        return _store.live_items(store)
+
+    def __len__(self) -> int:
+        return len(self.live_items())
+
+    def __repr__(self) -> str:
+        return (f"Uruv(executor={type(self.executor).__name__}, "
+                f"ts={self.ts}, leaf_cap={self.config.base.leaf_cap if hasattr(self.config, 'base') else self.config.leaf_cap})")

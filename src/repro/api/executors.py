@@ -1,0 +1,323 @@
+"""Pluggable execution backends for the `Uruv` client.
+
+An executor owns HOW a plan runs — which device passes, on what topology —
+while the client owns the store value and the ADT surface.  The contract
+(DESIGN.md Sec 9):
+
+  * ``create()``                        -> a fresh store pytree
+  * ``apply(store, batch, ...)``        -> (store, values[P], range_items)
+        linearizes the announce array in announce order (op i at
+        ``base_ts + i``), answering RANGE ops COMPLETELY (the executor
+        paginates internally); never returns a partially-applied store —
+        capacity failures raise ``CapacityError`` after bounded retries.
+  * ``lookup(store, keys, snap_ts)``    -> values (read-only, no clock)
+  * ``range_page(store, k1s, k2s, snap_ts, ...)`` -> RangePage
+        ONE bounded device pass over Q intervals (wait-free unit).
+  * ``range_all(store, k1s, k2s, snap_ts, ...)``  -> per-query page lists
+        complete answers; re-enters only still-truncated queries.
+  * ``snapshot / release / compact / ts`` — tracker + clock surface.
+
+``stats`` (shared with the client) counts ``device_passes``,
+``slow_path_rounds`` and ``compactions`` — the observable wait-free bound
+(benchmarks assert "one device pass per fast-path batch" through it).
+
+`LocalExecutor` runs on one device via ``repro.core.batch``;
+`ShardedExecutor` runs the same plans over a mesh axis via the
+``repro.core.sharded`` SPMD factories (replicated or routed announce
+distribution + all_gather'ed range merge) with bit-identical
+linearization, including version timestamps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import batch as _batch
+from repro.core import sharded as _sharded
+from repro.core import store as _store
+from repro.api.opbatch import OpBatch, RangePage
+
+CapacityError = _batch.CapacityError
+
+
+def _new_stats() -> Dict[str, int]:
+    return {"device_passes": 0, "slow_path_rounds": 0, "compactions": 0}
+
+
+@dataclasses.dataclass(frozen=True)
+class RangeOptions:
+    """Leaf/result budget of one bounded range pass (DESIGN.md Sec 8)."""
+
+    max_results: int = 1024
+    scan_leaves: int = 16
+    max_rounds: int = 8
+
+
+class LocalExecutor:
+    """Single-device execution over ``repro.core.store`` / ``core.batch``.
+
+    ``backend`` pins the kernel backend (xla | pallas | pallas_interpret)
+    for every pass this executor issues; None follows the process-wide
+    ``repro.core.backend`` resolution (URUV_BACKEND / set_backend).
+    """
+
+    def __init__(self, config: Optional[_store.UruvConfig] = None, *,
+                 backend: Optional[str] = None):
+        self.config = config or _store.UruvConfig()
+        self.backend = backend
+        self.stats = _new_stats()
+
+    # ------------------------------------------------------------- lifecycle
+    def create(self):
+        return _store.create(self.config)
+
+    def ts(self, store) -> int:
+        return int(np.asarray(store.ts))
+
+    # ----------------------------------------------------------------- write
+    def apply(self, store, batch: OpBatch, *, light_path: bool = True,
+              range_opts: RangeOptions = RangeOptions()):
+        store, values, range_pages = _batch.apply_mixed(
+            store, batch.codes, batch.keys, batch.values,
+            light_path=light_path, backend=self.backend,
+            max_results=range_opts.max_results,
+            scan_leaves=range_opts.scan_leaves,
+            max_rounds=range_opts.max_rounds,
+            stats=self.stats,
+        )
+        k2 = np.asarray(batch.values)
+        range_items = [(pos, page, int(k2[pos])) for pos, page in range_pages]
+        return store, values, range_items
+
+    # ------------------------------------------------------------------ read
+    def lookup(self, store, keys, snap_ts):
+        self.stats["device_passes"] += 1
+        return _store.bulk_lookup(
+            store, jnp.asarray(keys, jnp.int32),
+            jnp.asarray(snap_ts, jnp.int32), backend=self.backend,
+        )
+
+    def range_page(self, store, k1s, k2s, snap_ts,
+                   opts: RangeOptions = RangeOptions()) -> RangePage:
+        self.stats["device_passes"] += 1
+        keys, vals, cnt, trunc, resume = _store.bulk_range(
+            store, np.atleast_1d(np.asarray(k1s, np.int32)),
+            np.atleast_1d(np.asarray(k2s, np.int32)), snap_ts,
+            max_results=opts.max_results, scan_leaves=opts.scan_leaves,
+            max_rounds=opts.max_rounds, backend=self.backend,
+        )
+        return RangePage(keys, vals, cnt, trunc, resume)
+
+    def scan_page(self, store, k1: int, k2: int, snap_ts,
+                  *, max_scan_leaves: int = 64,
+                  max_results: int = 1024) -> RangePage:
+        """The paper's single-interval bounded RANGEQUERY pass (exactly
+        ``max_scan_leaves`` leaves — the seed contract), as a Q=1 page."""
+        self.stats["device_passes"] += 1
+        keys, vals, cnt, trunc = _store.range_query(
+            store, k1, k2, snap_ts,
+            max_scan_leaves=max_scan_leaves, max_results=max_results,
+            backend=self.backend,
+        )
+        # resume frontier: last kept key + 1 when the page has hits (never
+        # skips overflow-dropped hits); a truncated ZERO-hit page (all
+        # scanned keys dead at this snapshot) resumes at the first
+        # unscanned leaf's separator — resuming at k1 would livelock
+        i32 = jnp.int32
+        ML = store.cfg.max_leaves
+        lo_pos = jnp.maximum(
+            jnp.searchsorted(store.dir_keys, jnp.asarray(k1, i32),
+                             side="right").astype(i32) - 1, 0)
+        end_pos = lo_pos + max_scan_leaves
+        sep = jnp.where(
+            end_pos < store.n_leaves,
+            store.dir_keys[jnp.minimum(end_pos, ML - 1)],
+            jnp.asarray(k2, i32),
+        )
+        c = jnp.maximum(cnt - 1, 0)
+        resume = jnp.where(
+            cnt > 0, keys[c] + 1,
+            jnp.where(trunc, sep, jnp.asarray(k1, i32)),
+        )
+        return RangePage(keys[None], vals[None], cnt[None], trunc[None],
+                         resume[None])
+
+    def range_all(self, store, k1s, k2s, snap_ts,
+                  opts: RangeOptions = RangeOptions()
+                  ) -> List[List[Tuple[int, int]]]:
+        return _batch.bulk_range_all(
+            store, k1s, k2s, snap_ts,
+            max_results=opts.max_results, scan_leaves=opts.scan_leaves,
+            max_rounds=opts.max_rounds, backend=self.backend,
+            stats=self.stats,
+        )
+
+    # --------------------------------------------------------- snapshots, GC
+    def snapshot(self, store):
+        store, ts = _store.snapshot(store)
+        return store, int(ts)
+
+    def release(self, store, snap_ts: int):
+        return _store.release(store, snap_ts)
+
+    def compact(self, store):
+        self.stats["compactions"] += 1
+        store, n_live = _store.compact(store)
+        return store, int(n_live)
+
+
+class ShardedExecutor:
+    """Key-range-partitioned execution over a mesh axis (``core.sharded``).
+
+    Wraps the jitted SPMD factories — ``make_apply`` (replicated announce),
+    ``make_routed_apply`` (all_to_all routed announce, used first when the
+    global width divides the shard count) and ``make_range_apply`` (per-
+    shard bulk_range + on-device frontier-clamped merge) — behind the same
+    executor contract as `LocalExecutor`, so `Uruv` callers never branch
+    on topology.  Linearization is bit-identical to single-device
+    execution including version timestamps (per-op global timestamps +
+    the replicated clock; DESIGN.md Sec 3/8).
+
+    Capacity rejections have no sharded slow path: a fully-rejected
+    announce raises ``CapacityError`` (size shards for the working set).
+    """
+
+    def __init__(self, config: _sharded.ShardedConfig, mesh, *,
+                 route_factor: int = 2, routed: bool = True):
+        self.config = config
+        self.mesh = mesh
+        self.n_shards = mesh.shape[config.axis_name]
+        self.route_factor = route_factor
+        self.routed = routed
+        self.stats = _new_stats()
+        # SPMD factories are built lazily, cached per static config
+        # (light_path for the apply passes, RangeOptions for range)
+        self._apply_fns: Dict[bool, object] = {}
+        self._routed_fns: Dict[bool, object] = {}
+        self._lookup_fn = None
+        self._range_fns: Dict[RangeOptions, object] = {}
+
+    # ------------------------------------------------------------- lifecycle
+    def create(self):
+        return _sharded.create(self.config, self.mesh)
+
+    def ts(self, store) -> int:
+        return _sharded.global_ts(store)
+
+    def _set_ts(self, store, ts: int):
+        return dataclasses.replace(
+            store, ts=jnp.full_like(store.ts, np.int32(ts))
+        )
+
+    # ----------------------------------------------------------------- write
+    def _apply_crud(self, store, codes, keys, values, light_path: bool):
+        """One CRUD segment; timestamps come from the replicated clock
+        (``store.ts``, restated after range segments by the shared
+        apply_mixed loop), so op i of the segment runs at the global
+        ``store.ts + i``."""
+        apply_fn = self._apply_fns.get(light_path)
+        if apply_fn is None:
+            apply_fn = _sharded.make_apply(self.config, self.mesh,
+                                           light_path=light_path)
+            self._apply_fns[light_path] = apply_fn
+        routed = None
+        if self.routed and len(codes) % self.n_shards == 0:
+            routed = self._routed_fns.get(light_path)
+            if routed is None:
+                routed = _sharded.make_routed_apply(
+                    self.config, self.mesh, route_factor=self.route_factor,
+                    light_path=light_path,
+                )
+                self._routed_fns[light_path] = routed
+        try:
+            store, res = _sharded.sharded_apply_batch(
+                store, codes, keys, values,
+                apply_fn=apply_fn, routed_fn=routed, stats=self.stats,
+            )
+        except RuntimeError as e:        # full rejection: executor contract
+            raise CapacityError(str(e)) from e
+        return store, np.asarray(res)
+
+    def apply(self, store, batch: OpBatch, *, light_path: bool = True,
+              range_opts: RangeOptions = RangeOptions()):
+        # ONE copy of the announce-segmentation semantics: the shared
+        # core.batch.apply_mixed loop, with the sharded SPMD passes as its
+        # hooks (a CRUD segment's timestamps derive from the replicated
+        # clock, which the loop restates after every range segment)
+        store, values, range_pages = _batch.apply_mixed(
+            store, batch.codes, batch.keys, batch.values,
+            crud_fn=lambda st, c, k, v, op_ts, next_ts:
+                self._apply_crud(st, c, k, v, light_path),
+            range_all_fn=lambda st, k1, k2, snaps:
+                self.range_all(st, k1, k2, snaps, range_opts),
+            get_ts_fn=self.ts,
+            set_ts_fn=self._set_ts,
+        )
+        k2 = np.asarray(batch.values)
+        range_items = [(pos, page, int(k2[pos])) for pos, page in range_pages]
+        return store, values, range_items
+
+    # ------------------------------------------------------------------ read
+    def lookup(self, store, keys, snap_ts):
+        if self._lookup_fn is None:
+            _, self._lookup_fn, _ = _sharded.make_ops(self.config, self.mesh)
+        self.stats["device_passes"] += 1
+        keys = jnp.atleast_1d(jnp.asarray(keys, jnp.int32))
+        return self._lookup_fn(store, keys, jnp.asarray(snap_ts, jnp.int32))
+
+    def range_page(self, store, k1s, k2s, snap_ts,
+                   opts: RangeOptions = RangeOptions()) -> RangePage:
+        k1 = np.atleast_1d(np.asarray(k1s, np.int32))
+        k2 = np.atleast_1d(np.asarray(k2s, np.int32))
+        snaps = np.broadcast_to(np.asarray(snap_ts, np.int32), k1.shape)
+        fn = self._range_fns.get(opts)
+        if fn is None:
+            fn = _sharded.make_range_apply(
+                self.config, self.mesh, max_results=opts.max_results,
+                scan_leaves=opts.scan_leaves, max_rounds=opts.max_rounds,
+            )
+            self._range_fns[opts] = fn
+        self.stats["device_passes"] += 1
+        keys, vals, cnt, trunc, resume = fn(
+            store, jnp.asarray(k1), jnp.asarray(k2), jnp.asarray(snaps)
+        )
+        return RangePage(keys, vals, cnt, trunc, resume)
+
+    def scan_page(self, store, k1: int, k2: int, snap_ts, *,
+                  max_scan_leaves: int = 64,
+                  max_results: int = 1024) -> RangePage:
+        opts = RangeOptions(max_results=max_results,
+                            scan_leaves=max_scan_leaves, max_rounds=1)
+        return self.range_page(store, [k1], [k2], snap_ts, opts)
+
+    def range_all(self, store, k1s, k2s, snap_ts,
+                  opts: RangeOptions = RangeOptions()
+                  ) -> List[List[Tuple[int, int]]]:
+        """Complete Q-interval answers: the shared ``bulk_range_all``
+        pagination loop (power-of-two active-set compaction, exact resume)
+        driven by the sharded all_gather-merged bounded pass."""
+        def page_fn(st, lo, hi, sn):
+            page = self.range_page(st, lo, hi, sn, opts)
+            return (page.keys, page.values, page.count, page.truncated,
+                    page.resume_k1)
+
+        return _batch.bulk_range_all(store, k1s, k2s, snap_ts,
+                                     page_fn=page_fn)
+
+    # --------------------------------------------------------- snapshots, GC
+    def snapshot(self, store):
+        store, snap = _sharded.sharded_snapshot(store)
+        return store, int(snap)
+
+    def release(self, store, snap_ts: int):
+        return _sharded.sharded_release(store, snap_ts)
+
+    def compact(self, store):
+        self.stats["compactions"] += 1
+        store, n_live = jax.vmap(_store.compact)(store)
+        return store, int(np.asarray(n_live).sum())

@@ -1,0 +1,248 @@
+"""The typed plan IR of the public API: `OpBatch`, `Result`, `RangePage`.
+
+An `OpBatch` is the paper's announce array as ONE typed value instead of
+parallel ``(codes, keys, values, k1, k2, snap_ts)`` arrays: op i is
+``codes[i]`` applied to ``keys[i]`` (k1 for RANGEQUERY) with ``values[i]``
+(the inserted value, or k2 for RANGEQUERY).  Linearization is announce
+order — op i runs at timestamp ``base_ts + i`` — exactly the contract of
+``RefStore.apply_batch`` and ``repro.core.batch``.
+
+All three classes are registered pytree dataclasses: they flatten to their
+array leaves, cross ``jax.jit`` boundaries, and are safe to donate
+(``donate_argnums``) — the fields are plain ``int32``/``bool`` arrays with
+no static metadata, so same-shape batches never retrace a jitted consumer.
+
+Builders produce host (numpy) arrays — the IR is assembled on the host and
+crosses to the device once, inside the executor's single fused pass.
+``concat`` / ``pad_to`` stay jnp-based when handed traced values, so plans
+can also be composed inside jit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.ref import (
+    KEY_MAX, NOT_FOUND, TOMBSTONE,
+    OP_DELETE, OP_INSERT, OP_NOP, OP_RANGE, OP_SEARCH,
+)
+
+
+def _is_traced(*arrays) -> bool:
+    return any(isinstance(a, jax.Array) for a in arrays)
+
+
+def _np1d(x) -> np.ndarray:
+    return np.atleast_1d(np.asarray(x, np.int32))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class OpBatch:
+    """A typed announce array: ``codes[P]``, ``keys[P]``, ``values[P]``.
+
+    ``codes[i]`` in {OP_INSERT, OP_DELETE, OP_SEARCH, OP_RANGE, OP_NOP}.
+    For OP_RANGE, ``keys[i]`` is k1 and ``values[i]`` is k2 (inclusive).
+    Padded slots are ``(OP_NOP, KEY_MAX, 0)``.
+    """
+
+    codes: jax.Array   # int32 [P]
+    keys: jax.Array    # int32 [P]
+    values: jax.Array  # int32 [P]
+
+    # ---------------------------------------------------------- constructors
+    @classmethod
+    def inserts(cls, keys, values) -> "OpBatch":
+        """INSERT(keys[i], values[i]) for every i (values broadcastable)."""
+        k = _np1d(keys)
+        v = np.broadcast_to(_np1d(values), k.shape).astype(np.int32)
+        return cls(np.full(k.shape, OP_INSERT, np.int32), k, v.copy())
+
+    @classmethod
+    def deletes(cls, keys) -> "OpBatch":
+        k = _np1d(keys)
+        return cls(np.full(k.shape, OP_DELETE, np.int32), k,
+                   np.zeros(k.shape, np.int32))
+
+    @classmethod
+    def searches(cls, keys) -> "OpBatch":
+        k = _np1d(keys)
+        return cls(np.full(k.shape, OP_SEARCH, np.int32), k,
+                   np.zeros(k.shape, np.int32))
+
+    @classmethod
+    def ranges(cls, k1, k2) -> "OpBatch":
+        """RANGEQUERY([k1[i], k2[i]]) — op i snapshots at its own timestamp."""
+        a = _np1d(k1)
+        b = np.broadcast_to(_np1d(k2), a.shape).astype(np.int32)
+        return cls(np.full(a.shape, OP_RANGE, np.int32), a, b.copy())
+
+    @classmethod
+    def updates(cls, keys, values) -> "OpBatch":
+        """Legacy (keys, values) update encoding: TOMBSTONE value -> DELETE,
+        KEY_MAX key -> NOP, otherwise INSERT (the pre-PR-1 announce shape)."""
+        k = _np1d(keys)
+        v = np.broadcast_to(_np1d(values), k.shape).astype(np.int32)
+        codes = np.where(
+            k >= KEY_MAX, OP_NOP,
+            np.where(v == TOMBSTONE, OP_DELETE, OP_INSERT),
+        ).astype(np.int32)
+        return cls(codes, k, v.copy())
+
+    @classmethod
+    def from_ops(cls, ops: Sequence[Tuple[int, int, int]]) -> "OpBatch":
+        """From a list of (op_code, key, value) tuples (oracle encoding)."""
+        arr = np.asarray(list(ops), np.int32).reshape(-1, 3)
+        return cls(arr[:, 0].copy(), arr[:, 1].copy(), arr[:, 2].copy())
+
+    @classmethod
+    def empty(cls) -> "OpBatch":
+        z = np.zeros((0,), np.int32)
+        return cls(z, z.copy(), z.copy())
+
+    # ------------------------------------------------------------- combinators
+    @classmethod
+    def concat(cls, *batches: "OpBatch") -> "OpBatch":
+        """Concatenate plans in announce order (jit-safe on traced inputs)."""
+        if not batches:
+            return cls.empty()
+        leaves = [a for b in batches for a in (b.codes, b.keys, b.values)]
+        xp = jnp if _is_traced(*leaves) else np
+        return cls(
+            xp.concatenate([b.codes for b in batches]),
+            xp.concatenate([b.keys for b in batches]),
+            xp.concatenate([b.values for b in batches]),
+        )
+
+    def pad_to(self, width: int) -> "OpBatch":
+        """Pad with NOPs to ``width`` (fixed-shape plans: no retracing)."""
+        n = len(self)
+        if width < n:
+            raise ValueError(f"pad_to({width}) below batch width {n}")
+        if width == n:
+            return self
+        r = width - n
+        xp = jnp if _is_traced(self.codes, self.keys, self.values) else np
+        return OpBatch(
+            xp.concatenate([self.codes, xp.full((r,), OP_NOP, xp.int32)]),
+            xp.concatenate([self.keys, xp.full((r,), KEY_MAX, xp.int32)]),
+            xp.concatenate([self.values, xp.zeros((r,), xp.int32)]),
+        )
+
+    # ---------------------------------------------------------------- queries
+    def __len__(self) -> int:
+        return int(self.codes.shape[0])
+
+    @property
+    def range_positions(self) -> np.ndarray:
+        """Announce positions of the RANGE ops (host-side)."""
+        return np.nonzero(np.asarray(self.codes) == OP_RANGE)[0]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RangePage:
+    """One bounded range-scan pass over Q intervals (rows key-sorted).
+
+    ``truncated[q]`` means interval q was not fully covered by this pass;
+    re-enter from ``resume_k1[q]`` (the exact no-skip/no-duplicate resume
+    frontier of DESIGN.md Sec 8).
+    """
+
+    keys: jax.Array       # int32 [Q, R], KEY_MAX padded
+    values: jax.Array     # int32 [Q, R], NOT_FOUND padded
+    count: jax.Array      # int32 [Q]
+    truncated: jax.Array  # bool  [Q]
+    resume_k1: jax.Array  # int32 [Q]
+
+    def items(self, q: int = 0) -> List[Tuple[int, int]]:
+        """Query q's (key, value) page as a host list."""
+        c = int(np.asarray(self.count)[q])
+        k = np.asarray(self.keys)[q, :c]
+        v = np.asarray(self.values)[q, :c]
+        return list(zip(k.tolist(), v.tolist()))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Result:
+    """Per-op outcome of ``Uruv.apply`` in announce order.
+
+    * ``values[i]``     — INSERT/DELETE: previous value (NOT_FOUND if new);
+                          SEARCH: value at the op's snapshot; RANGE: number
+                          of live keys in [k1, k2] at the op's snapshot;
+                          NOP/padded: NOT_FOUND.
+    * ``found[i]``      — ``values[i] != NOT_FOUND`` (a RANGE op is always
+                          "found": its count is never NOT_FOUND).
+    * ``timestamps[i]`` — the op's linearization timestamp (base_ts + i).
+    * ``range_index``   — announce positions of the RANGE ops, in order.
+    * ``range_pages``   — one ``[n_q, 2]`` (key, value) array per RANGE op
+                          (complete — the executor paginates in-pass and
+                          re-enters until every interval is covered).
+    * ``range_resume``  — per RANGE op, the frontier after the answered
+                          pages: k2 for a complete answer (always, under
+                          ``Uruv.apply``), the exact resume key otherwise.
+    """
+
+    values: jax.Array                       # int32 [P]
+    found: jax.Array                        # bool  [P]
+    timestamps: jax.Array                   # int32 [P]
+    range_index: jax.Array                  # int32 [Qr]
+    range_pages: Tuple[jax.Array, ...]      # Qr x int32 [n_q, 2]
+    range_resume: jax.Array                 # int32 [Qr]
+
+    def __len__(self) -> int:
+        return int(self.values.shape[0])
+
+    def page(self, announce_pos: int) -> List[Tuple[int, int]]:
+        """The (key, value) page of the RANGE op at ``announce_pos``."""
+        idx = np.asarray(self.range_index).tolist()
+        arr = np.asarray(self.range_pages[idx.index(int(announce_pos))])
+        return [(int(k), int(v)) for k, v in arr]
+
+    def pages(self) -> List[List[Tuple[int, int]]]:
+        """All RANGE pages, in announce order of the RANGE ops."""
+        return [
+            [(int(k), int(v)) for k, v in np.asarray(p)]
+            for p in self.range_pages
+        ]
+
+    @property
+    def value(self) -> int:
+        """Scalar convenience for single-op batches."""
+        if len(self) != 1:
+            raise ValueError("Result.value requires a single-op batch")
+        return int(np.asarray(self.values)[0])
+
+
+def make_result(
+    values: np.ndarray,
+    codes: np.ndarray,
+    base_ts: int,
+    range_items: Iterable[Tuple[int, List[Tuple[int, int]], int]] = (),
+) -> Result:
+    """Assemble a Result from executor outputs.
+
+    ``range_items`` yields (announce_pos, page, resume_k1) per RANGE op.
+    """
+    values = np.asarray(values, np.int64)
+    codes = np.asarray(codes, np.int32)
+    n = len(values)
+    idx, pages, resumes = [], [], []
+    for pos, page, resume in range_items:
+        idx.append(pos)
+        pages.append(np.asarray(page, np.int32).reshape(-1, 2))
+        resumes.append(resume)
+    return Result(
+        values=values,
+        found=(values != NOT_FOUND) & (codes != OP_NOP),
+        timestamps=(base_ts + np.arange(n)).astype(np.int32),
+        range_index=np.asarray(idx, np.int32),
+        range_pages=tuple(pages),
+        range_resume=np.asarray(resumes, np.int32),
+    )

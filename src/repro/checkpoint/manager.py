@@ -30,8 +30,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 import jax
 
-from repro.core import batch as uruv_batch
-from repro.core import store as uruv_store
+from repro.api import Uruv, UruvConfig
 
 
 def _flatten(tree) -> List[Tuple[str, Any]]:
@@ -51,9 +50,8 @@ class CheckpointManager:
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self.async_write = async_write
-        self.index = uruv_store.create(
-            uruv_store.UruvConfig(leaf_cap=16, max_leaves=512,
-                                  max_versions=1 << 14)
+        self.index = Uruv(
+            UruvConfig(leaf_cap=16, max_leaves=512, max_versions=1 << 14)
         )
         self._pending: Optional[threading.Thread] = None
         self._load_existing()
@@ -83,10 +81,7 @@ class CheckpointManager:
                 shutil.rmtree(man_dir)
             tmp.rename(man_dir)                   # atomic publish
             # index insert: key = step, value = 1 (manifest id)
-            self.index, _ = uruv_batch.apply_updates(
-                self.index, np.array([step], np.int32),
-                np.array([1], np.int32),
-            )
+            self.index.insert([step], [1])
             self._gc()
 
         if self.async_write:
@@ -103,11 +98,8 @@ class CheckpointManager:
     # --------------------------------------------------------------- restore
     def latest_step(self) -> Optional[int]:
         self.wait()
-        self.index, snap = uruv_store.snapshot(self.index)
-        self.index, items = uruv_batch.range_query_all(
-            self.index, 0, 2**31 - 3, int(snap)
-        )
-        self.index = uruv_store.release(self.index, int(snap))
+        with self.index.snapshot() as snap:
+            items = self.index.range(0, 2**31 - 3, snap)
         steps = [k for k, v in items if v == 1]
         return max(steps) if steps else None
 
@@ -142,19 +134,13 @@ class CheckpointManager:
 
     # -------------------------------------------------------------------- gc
     def _gc(self) -> None:
-        self.index, snap = uruv_store.snapshot(self.index)
-        self.index, items = uruv_batch.range_query_all(
-            self.index, 0, 2**31 - 3, int(snap)
-        )
-        self.index = uruv_store.release(self.index, int(snap))
+        with self.index.snapshot() as snap:
+            items = self.index.range(0, 2**31 - 3, snap)
         steps = sorted(k for k, v in items if v == 1)
         drop = steps[: -self.keep] if self.keep else []
         if drop:
-            self.index, _ = uruv_batch.apply_updates(
-                self.index, np.array(drop, np.int32),
-                np.full(len(drop), uruv_store.TOMBSTONE, np.int32),
-            )
-            self.index, _ = uruv_store.compact(self.index)
+            self.index.delete(np.array(drop, np.int32))
+            self.index.compact()
             for s in drop:
                 d = self.dir / f"step_{s:08d}"
                 if d.exists():
@@ -167,6 +153,4 @@ class CheckpointManager:
                 steps.append(int(d.name.split("_")[1]))
         if steps:
             arr = np.array(sorted(steps), np.int32)
-            self.index, _ = uruv_batch.apply_updates(
-                self.index, arr, np.ones_like(arr)
-            )
+            self.index.insert(arr, np.ones_like(arr))

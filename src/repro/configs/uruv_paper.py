@@ -2,7 +2,7 @@
 and batch geometry for the Fig. 8 / Fig. 9 reproductions."""
 import dataclasses
 
-from repro.core.store import UruvConfig
+from repro.api import UruvConfig
 
 
 @dataclasses.dataclass(frozen=True)

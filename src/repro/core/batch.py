@@ -25,7 +25,8 @@ deterministic, the host sequences them).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+import warnings
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 import jax.numpy as jnp
@@ -45,6 +46,11 @@ def _clear_oflow(store: S.UruvStore) -> S.UruvStore:
     return dataclasses.replace(store, oflow=jnp.zeros_like(store.oflow))
 
 
+def _bump(stats: Optional[Dict[str, int]], key: str, by: int = 1) -> None:
+    if stats is not None:
+        stats[key] = stats.get(key, 0) + by
+
+
 def _apply_rounds(
     store: S.UruvStore,
     codes: np.ndarray,
@@ -53,6 +59,9 @@ def _apply_rounds(
     op_ts: Optional[np.ndarray],
     next_ts,
     *,
+    light_path: bool = True,
+    backend: Optional[str] = None,
+    stats: Optional[Dict[str, int]] = None,
     _depth: int = 0,
 ) -> Tuple[S.UruvStore, np.ndarray]:
     """One fast-path attempt + bounded help-rounds on rejection.
@@ -61,17 +70,22 @@ def _apply_rounds(
     ``store.ts + i`` itself (zero host syncs on the fast path).  Slow-path
     recursion materialises the timestamps once and slices them, so every
     round applies its ops at exactly the timestamps the one-pass
-    application would have used.
+    application would have used.  ``stats`` (see ``repro.api``) counts
+    every device pass and slow-path round.
     """
     if _depth > MAX_SLOWPATH_ROUNDS:
         raise CapacityError("slow path failed to converge; store too small")
+    _bump(stats, "device_passes")
     new_store, res, ok = S.bulk_apply(
-        store, codes, keys, values, op_ts=op_ts, next_ts=next_ts
+        store, codes, keys, values, op_ts=op_ts, next_ts=next_ts,
+        light_path=light_path, backend=backend,
     )
     if bool(ok):
         return new_store, np.asarray(res)
+    _bump(stats, "slow_path_rounds")
     reason = int(new_store.oflow) & ~int(store.oflow)
     if reason & (S.OFLOW_VERSIONS | S.OFLOW_LEAVES):
+        _bump(stats, "compactions")
         compacted, _ = S.compact(_clear_oflow(store))
         # progress check on the actual constrained resources: the version
         # pool and the leaf bump-allocator (compact() resets both)
@@ -86,7 +100,8 @@ def _apply_rounds(
                 f"leaves={int(store.n_alloc)}/{store.cfg.max_leaves})"
             )
         return _apply_rounds(compacted, codes, keys, values, op_ts, next_ts,
-                             _depth=_depth + 1)
+                             light_path=light_path, backend=backend,
+                             stats=stats, _depth=_depth + 1)
     # OFLOW_LEAFBATCH: help in rounds — halve the announce array, keeping
     # the per-op timestamp assignment of the rejected one-pass attempt.
     if len(keys) == 1:
@@ -99,9 +114,13 @@ def _apply_rounds(
     mid = len(keys) // 2
     st = _clear_oflow(store)
     st, res_a = _apply_rounds(st, codes[:mid], keys[:mid], values[:mid],
-                              op_ts[:mid], int(op_ts[mid]), _depth=_depth + 1)
+                              op_ts[:mid], int(op_ts[mid]),
+                              light_path=light_path, backend=backend,
+                              stats=stats, _depth=_depth + 1)
     st, res_b = _apply_rounds(st, codes[mid:], keys[mid:], values[mid:],
-                              op_ts[mid:], next_ts, _depth=_depth + 1)
+                              op_ts[mid:], next_ts,
+                              light_path=light_path, backend=backend,
+                              stats=stats, _depth=_depth + 1)
     return st, np.concatenate([res_a, res_b])
 
 
@@ -110,29 +129,49 @@ def apply_updates(
     keys: np.ndarray,
     values: np.ndarray,
 ) -> Tuple[S.UruvStore, np.ndarray]:
-    """Apply INSERT/DELETE announce array; returns (store, prev_values).
+    """DEPRECATED — use ``repro.api.Uruv.apply(OpBatch.updates(keys, values))``.
 
-    DELETE == value TOMBSTONE; padded keys (KEY_MAX) are no-ops.
-    Timestamps follow announce order across all slow-path rounds (round
-    widths sum to the original width, so ts advances exactly as the
-    one-pass application would).
+    Legacy INSERT/DELETE announce array (DELETE == value TOMBSTONE, padded
+    keys KEY_MAX are no-ops); returns (store, prev_values).  Delegates to
+    the ``repro.api`` client, so results and linearization are bit-exact
+    with the client path.
     """
-    keys = np.asarray(keys, np.int32)
-    values = np.asarray(values, np.int32)
-    codes = np.asarray(S.derive_update_codes(keys, values))
-    return _apply_rounds(store, codes, keys, values, None, None)
+    warnings.warn(
+        "repro.core.batch.apply_updates is deprecated; use "
+        "repro.api.Uruv.apply(OpBatch.updates(keys, values))",
+        DeprecationWarning, stacklevel=2,
+    )
+    from repro import api
+
+    client = api.Uruv.from_store(store)
+    res = client.apply(api.OpBatch.updates(keys, values))
+    return client.store, np.asarray(res.values)
 
 
-def apply_batch(
-    store: S.UruvStore, ops: Sequence[Tuple[int, int, int]]
-) -> Tuple[S.UruvStore, List[int]]:
-    """Mixed announce array of (op, key, value) — the full ADT, linearized
-    in announce order (op i at ts base+i), matching RefStore.apply_batch.
+def apply_mixed(
+    store: S.UruvStore,
+    codes: np.ndarray,
+    keys: np.ndarray,
+    values: np.ndarray,
+    *,
+    light_path: bool = True,
+    backend: Optional[str] = None,
+    max_results: int = 1024,
+    scan_leaves: int = 16,
+    max_rounds: int = 8,
+    stats: Optional[Dict[str, int]] = None,
+    crud_fn=None,
+    range_all_fn=None,
+    get_ts_fn=None,
+    set_ts_fn=None,
+) -> Tuple[S.UruvStore, np.ndarray, List[Tuple[int, List[Tuple[int, int]]]]]:
+    """Array-level mixed announce sequencer — the host half of the ADT.
 
-    RANGEQUERY rides in the same announce array: ``(OP_RANGE, k1, k2)`` at
-    announce index i scans [k1, k2] at snapshot ``base + i`` — it observes
-    every earlier in-batch update and none of the later ones — and its
-    result is the live-key count (full pages via :func:`bulk_range_all`).
+    Linearizes ``(codes[i], keys[i], values[i])`` in announce order (op i
+    at ts base+i), matching ``RefStore.apply_batch``.  Returns
+    ``(store, results[n] int64, range_pages)`` where ``range_pages`` is a
+    list of (announce_pos, complete (key, value) page) for every RANGE op
+    (``results`` carries their live-key counts).
 
     Fast path: one device pass (`store.bulk_apply`) for a pure-CRUD array
     (zero host syncs).  With range ops, the array executes in segments at
@@ -145,36 +184,84 @@ def apply_batch(
     keys past cfg.max_chain; the segment order is the range analogue of
     the in-pass predecessor short-circuit that makes SEARCH exact,
     DESIGN.md Sec 3/8).
+
+    The four hooks let another topology reuse THIS loop (one copy of the
+    segmentation semantics, mirroring bulk_range_all's ``page_fn``):
+    ``crud_fn(store, codes, keys, values, op_ts, next_ts)`` applies one
+    CRUD segment (default: the local help-rounds; a custom fn may ignore
+    ``op_ts`` if its passes derive timestamps from the store clock),
+    ``range_all_fn(store, k1, k2, snaps)`` answers one RANGE segment
+    completely, ``get_ts_fn(store)`` reads the global clock, and
+    ``set_ts_fn(store, ts)`` restates it after a RANGE segment (range ops
+    occupy announce slots but their passes do not advance the clock).
     """
-    codes = np.array([o[0] for o in ops], np.int32)
-    keys = np.array([o[1] for o in ops], np.int32)
-    vals = np.array([o[2] for o in ops], np.int32)
+    codes = np.asarray(codes, np.int32)
+    keys = np.asarray(keys, np.int32)
+    vals = np.asarray(values, np.int32)
+    if crud_fn is None:
+        def crud_fn(st, c, k, v, op_ts, next_ts):
+            return _apply_rounds(st, c, k, v, op_ts, next_ts,
+                                 light_path=light_path, backend=backend,
+                                 stats=stats)
+    if range_all_fn is None:
+        def range_all_fn(st, k1, k2, snaps):
+            return bulk_range_all(
+                st, k1, k2, snaps,
+                max_results=max_results, scan_leaves=scan_leaves,
+                max_rounds=max_rounds, backend=backend, stats=stats,
+            )
+    if get_ts_fn is None:
+        get_ts_fn = lambda st: int(st.ts)  # noqa: E731
+    if set_ts_fn is None:
+        def set_ts_fn(st, ts):
+            return dataclasses.replace(st, ts=jnp.asarray(ts, jnp.int32))
+    n = len(codes)
+    if n == 0:
+        return store, np.zeros(0, np.int64), []
     rmask = codes == OP_RANGE
     if not rmask.any():
-        store, res = _apply_rounds(store, codes, keys, vals, None, None)
-        return store, res.astype(np.int64).tolist()
-    n = len(codes)
-    base = int(store.ts)
+        store, res = crud_fn(store, codes, keys, vals, None, None)
+        return store, np.asarray(res).astype(np.int64), []
+    base = get_ts_fn(store)
     op_ts = (base + np.arange(n)).astype(np.int32)
     results = np.full(n, NOT_FOUND, np.int64)
+    range_pages: List[Tuple[int, List[Tuple[int, int]]]] = []
     i = 0
     while i < n:
         j = i
         while j < n and bool(rmask[j]) == bool(rmask[i]):
             j += 1
         if rmask[i]:
-            pages = bulk_range_all(store, keys[i:j], vals[i:j], op_ts[i:j])
+            pages = range_all_fn(store, keys[i:j], vals[i:j], op_ts[i:j])
             results[i:j] = [len(p) for p in pages]
+            range_pages.extend(zip(range(i, j), pages))
+            # CRUD passes advance the clock themselves (next_ts / the
+            # replicated counter); range segments must restate it
+            store = set_ts_fn(store, base + j)
         else:
-            store, res = _apply_rounds(
-                store, codes[i:j], keys[i:j], vals[i:j], op_ts[i:j], base + j
-            )
+            store, res = crud_fn(store, codes[i:j], keys[i:j], vals[i:j],
+                                 op_ts[i:j], base + j)
             results[i:j] = res
         i = j
-    if int(store.ts) != base + n:     # batch ended with range ops
-        store = dataclasses.replace(
-            store, ts=jnp.asarray(base + n, jnp.int32)
-        )
+    return store, results, range_pages
+
+
+def apply_batch(
+    store: S.UruvStore, ops: Sequence[Tuple[int, int, int]]
+) -> Tuple[S.UruvStore, List[int]]:
+    """Mixed announce array of (op, key, value) tuples; thin wrapper over
+    :func:`apply_mixed` keeping the oracle-shaped (store, list) signature.
+
+    RANGEQUERY rides in the same announce array: ``(OP_RANGE, k1, k2)`` at
+    announce index i scans [k1, k2] at snapshot ``base + i`` — it observes
+    every earlier in-batch update and none of the later ones — and its
+    result is the live-key count (full pages via ``repro.api.Uruv.apply``
+    or :func:`bulk_range_all`).
+    """
+    codes = np.array([o[0] for o in ops], np.int32)
+    keys = np.array([o[1] for o in ops], np.int32)
+    vals = np.array([o[2] for o in ops], np.int32)
+    store, results, _ = apply_mixed(store, codes, keys, vals)
     return store, results.tolist()
 
 
@@ -197,6 +284,9 @@ def bulk_range_all(
     max_results: int = 1024,
     scan_leaves: int = 16,
     max_rounds: int = 8,
+    backend: Optional[str] = None,
+    stats: Optional[Dict[str, int]] = None,
+    page_fn=None,
 ) -> List[List[Tuple[int, int]]]:
     """Answer Q range queries COMPLETELY; returns per-query (key, value) lists.
 
@@ -210,7 +300,21 @@ def bulk_range_all(
     Read-only: ``snap_ts`` (scalar or [Q]) must already be registered if
     isolation across later updates is required (see store.snapshot /
     release).
+
+    ``page_fn(store, k1[W], k2[W], snap[W]) -> (keys, vals, count,
+    truncated, resume_k1)`` overrides the bounded pass itself (the sharded
+    executor supplies its all_gather-merged pass); the pagination loop —
+    active-set compaction, resume, convergence bound — is shared either
+    way, so the topologies cannot drift.
     """
+    if page_fn is None:
+        def page_fn(st, lo_p, hi_p, sn_p):
+            _bump(stats, "device_passes")
+            return S.bulk_range(
+                st, lo_p, hi_p, sn_p,
+                max_results=max_results, scan_leaves=scan_leaves,
+                max_rounds=max_rounds, backend=backend,
+            )
     k1 = np.asarray(k1s, np.int32).reshape(-1)
     k2 = np.asarray(k2s, np.int32).reshape(-1)
     Q = len(k1)
@@ -224,11 +328,7 @@ def bulk_range_all(
         lo_p = np.concatenate([lo, np.full(pad, _DONE_LO, np.int32)])
         hi_p = np.concatenate([hi, np.full(pad, _DONE_HI, np.int32)])
         sn_p = np.concatenate([sn, np.zeros(pad, np.int32)])
-        keys, vals, cnt, trunc, resume = S.bulk_range(
-            store, lo_p, hi_p, sn_p,
-            max_results=max_results, scan_leaves=scan_leaves,
-            max_rounds=max_rounds,
-        )
+        keys, vals, cnt, trunc, resume = page_fn(store, lo_p, hi_p, sn_p)
         keys = np.asarray(keys)
         vals = np.asarray(vals)
         cnt = np.asarray(cnt)
@@ -263,29 +363,23 @@ def range_query_all(
     max_scan_leaves: int = 64,
     max_results: int = 1024,
 ) -> Tuple[S.UruvStore, List[Tuple[int, int]]]:
-    """Paginated snapshot range scan covering [k1, k2] completely.
+    """DEPRECATED — use ``repro.api.Uruv.range(k1, k2, snap_ts)``.
 
-    Thin Q=1 wrapper over :func:`bulk_range_all` (kept for its
-    register-the-snapshot convenience and the legacy signature); each
-    device pass is bounded (wait-free) at exactly ``max_scan_leaves``
-    leaves — the seed contract — and the host re-enters only for scans
-    larger than that or than ``max_results`` hits per page.
-    Registers/releases the snapshot in the version tracker when
-    ``snap_ts`` is None.
+    Paginated snapshot range scan covering [k1, k2] completely, with the
+    legacy (store, items) signature.  Registers/releases the snapshot in
+    the version tracker when ``snap_ts`` is None.  Delegates to the
+    ``repro.api`` client, so pages are bit-exact with the client path.
     """
-    own_snap = snap_ts is None
-    if own_snap:
-        store, ts = S.snapshot(store)
-        snap_ts = int(ts)
-    # no try/finally: on CapacityError the caller keeps the store it passed
-    # in, which never held this registration (functional updates self-heal;
-    # stateful owners like engine.snapshot_views DO need the finally)
-    out = bulk_range_all(
-        store, [k1], [k2], snap_ts,
-        max_results=max_results,
-        scan_leaves=max_scan_leaves,
-        max_rounds=1,
-    )[0]
-    if own_snap:
-        store = S.release(store, snap_ts)
-    return store, out
+    warnings.warn(
+        "repro.core.batch.range_query_all is deprecated; use "
+        "repro.api.Uruv.range(k1, k2, snap_ts)",
+        DeprecationWarning, stacklevel=2,
+    )
+    from repro import api
+
+    client = api.Uruv.from_store(store)
+    out = client.range(k1, k2, snap_ts,
+                       max_results=max_results,
+                       scan_leaves=max_scan_leaves,
+                       max_rounds=1)
+    return client.store, out

@@ -80,7 +80,8 @@ def _owner(cfg: ShardedConfig, keys: jax.Array, n_shards: int) -> jax.Array:
     return jnp.clip((keys - cfg.key_lo) // span, 0, n_shards - 1).astype(jnp.int32)
 
 
-def _mixed_core(cfg: ShardedConfig, n_shards: int, st, codes, keys, values):
+def _mixed_core(cfg: ShardedConfig, n_shards: int, st, codes, keys, values,
+                light_path: bool = True):
     """Shared SPMD body: apply the replicated mixed announce on one shard.
 
     Ops not owned by this shard become NOPs; per-op global timestamps keep
@@ -98,13 +99,14 @@ def _mixed_core(cfg: ShardedConfig, n_shards: int, st, codes, keys, values):
         st, lcodes, lkeys, values,
         op_ts=base + jnp.arange(G, dtype=i32),
         next_ts=base + jnp.asarray(G, i32),
+        light_path=light_path,
     )
     res_all = lax.psum(jnp.where(mine, res - NOT_FOUND, 0), ax) + NOT_FOUND
     ok_all = lax.psum(jnp.where(ok, 0, 1), ax) == 0
     return new_store, res_all, ok_all
 
 
-def make_apply(cfg: ShardedConfig, mesh: Mesh):
+def make_apply(cfg: ShardedConfig, mesh: Mesh, *, light_path: bool = True):
     """Jitted SPMD mixed-op pass over a *replicated* announce array.
 
     (store, op_codes[G], keys[G], values[G]) -> (store, results[G], ok).
@@ -120,7 +122,8 @@ def make_apply(cfg: ShardedConfig, mesh: Mesh):
 
     def _apply_block(st_blk, codes, keys, values):
         st = jax.tree.map(lambda x: x[0], st_blk)
-        new_store, res_all, ok = _mixed_core(cfg, n_shards, st, codes, keys, values)
+        new_store, res_all, ok = _mixed_core(cfg, n_shards, st, codes, keys,
+                                             values, light_path)
         return jax.tree.map(lambda x: x[None], new_store), res_all, ok
 
     return jax.jit(
@@ -133,7 +136,8 @@ def make_apply(cfg: ShardedConfig, mesh: Mesh):
     )
 
 
-def make_routed_apply(cfg: ShardedConfig, mesh: Mesh, *, route_factor: int = 2):
+def make_routed_apply(cfg: ShardedConfig, mesh: Mesh, *,
+                      route_factor: int = 2, light_path: bool = True):
     """Jitted SPMD mixed-op pass over a *sharded* announce array.
 
     The announce arrays arrive partitioned over ``axis_name`` (global width
@@ -188,6 +192,7 @@ def make_routed_apply(cfg: ShardedConfig, mesh: Mesh, *, route_factor: int = 2):
             st, flat_codes, flat_keys, rvals.reshape(-1),
             op_ts=base + flat_pos,
             next_ts=base + jnp.asarray(G, i32),
+            light_path=light_path,
         )
         contrib = jnp.zeros((G,), i32).at[flat_pos].add(
             jnp.where(flat_keys < KEY_MAX, res - NOT_FOUND, 0)
@@ -294,7 +299,7 @@ def pad_announce(codes, keys, values, multiple: int):
 
 
 def sharded_apply_batch(store, codes, keys, values, *, apply_fn,
-                        routed_fn=None):
+                        routed_fn=None, stats=None):
     """Host fast/slow sequencing: routed pass first, replicated fallback.
 
     Returns (store, results[G]).  Raises RuntimeError if even the
@@ -309,13 +314,17 @@ def sharded_apply_batch(store, codes, keys, values, *, apply_fn,
             "sharded_apply_batch handles SEARCH/INSERT/DELETE/NOP only; "
             "answer OP_RANGE announce arrays via make_range_apply"
         )
+    from repro.core.batch import _bump   # shared stats counter (host-side)
+
     if routed_fn is not None:
+        _bump(stats, "device_passes")
         new_store, res, ok = routed_fn(
             store, jnp.asarray(codes), jnp.asarray(keys), jnp.asarray(values)
         )
         if bool(ok):
             return new_store, np.asarray(res)
         # routing budget exceeded: discard the partial store, fall back
+    _bump(stats, "device_passes")
     new_store, res, ok = apply_fn(
         store, jnp.asarray(codes), jnp.asarray(keys), jnp.asarray(values)
     )

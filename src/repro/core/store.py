@@ -594,32 +594,33 @@ def derive_update_codes(keys: jax.Array, values: jax.Array) -> jax.Array:
     ).astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("backend", "light_path"))
-def _bulk_update(store, keys, values, op_ts, next_ts, *, backend,
-                 light_path=True):
-    codes = derive_update_codes(keys, values)
-    return _bulk_apply_impl(store, codes, keys, values, None, op_ts, next_ts,
-                            backend, light_path)
-
-
 def bulk_update(
     store: UruvStore, keys: jax.Array, values: jax.Array,
     *, op_ts=None, next_ts=None, backend: str | None = None,
     light_path: bool = True,
 ) -> Tuple[UruvStore, jax.Array, jax.Array]:
-    """Apply a batch of INSERT/DELETE ops (DELETE == value TOMBSTONE).
+    """DEPRECATED — use ``repro.api.Uruv.apply(OpBatch.updates(keys, values))``
+    (or :func:`bulk_apply` for the raw single-pass primitive).
 
-    Thin wrapper over :func:`bulk_apply` with derived op codes.
-    Linearization: op i gets timestamp ``store.ts + i`` (announce order)
-    unless ``op_ts`` overrides it.  Returns (new_store, prev_values[P], ok).
-    ``ok=False`` means the batch was rejected atomically and must be retried
-    via the slow path (repro.core.batch splits it).  Padded keys (KEY_MAX)
-    are no-ops.
+    Legacy INSERT/DELETE encoding (DELETE == value TOMBSTONE, KEY_MAX keys
+    are no-ops); delegates to :func:`bulk_apply` with derived op codes, the
+    same pass the ``repro.api`` client issues, so results are bit-exact
+    with the client path.  Returns (new_store, prev_values[P], ok);
+    ``ok=False`` means the batch was rejected atomically and must be
+    retried via the slow path.
     """
-    return _bulk_update(
-        store, jnp.asarray(keys, jnp.int32), jnp.asarray(values, jnp.int32),
-        op_ts, next_ts, backend=backend or _B.get_backend(),
-        light_path=light_path,
+    import warnings
+
+    warnings.warn(
+        "repro.core.store.bulk_update is deprecated; use "
+        "repro.api.Uruv.apply(OpBatch.updates(keys, values))",
+        DeprecationWarning, stacklevel=2,
+    )
+    keys = jnp.asarray(keys, jnp.int32)
+    values = jnp.asarray(values, jnp.int32)
+    return bulk_apply(
+        store, derive_update_codes(keys, values), keys, values,
+        op_ts=op_ts, next_ts=next_ts, backend=backend, light_path=light_path,
     )
 
 

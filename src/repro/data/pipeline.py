@@ -18,9 +18,8 @@ from typing import Dict, Iterator, List, Optional, Tuple
 import numpy as np
 import jax.numpy as jnp
 
+from repro.api import OpBatch, Uruv, UruvConfig
 from repro.config import ArchConfig
-from repro.core import batch as uruv_batch
-from repro.core import store as uruv_store
 
 
 # ---------------------------------------------------------------------------
@@ -95,20 +94,22 @@ class StreamingSampleStore:
                                      physical reclaim via compact()
     """
 
-    def __init__(self, cfg: Optional[uruv_store.UruvConfig] = None):
-        self.store = uruv_store.create(cfg or uruv_store.UruvConfig())
+    def __init__(self, cfg: Optional[UruvConfig] = None):
+        self.client = Uruv(cfg or UruvConfig())
+
+    @property
+    def store(self):
+        """The current store snapshot (immutable pytree; tests/inspection)."""
+        return self.client.store
 
     def ingest(self, ids: np.ndarray, offsets: np.ndarray) -> None:
-        self.store, _ = uruv_batch.apply_updates(
-            self.store, ids.astype(np.int32), offsets.astype(np.int32)
-        )
+        self.client.apply(OpBatch.inserts(ids, offsets))
 
     def epoch_view(self) -> int:
-        self.store, snap = uruv_store.snapshot(self.store)
-        return int(snap)
+        return self.client.acquire_snapshot()
 
     def release(self, snap: int) -> None:
-        self.store = uruv_store.release(self.store, snap)
+        self.client.release_snapshot(snap)
 
     def read_shard(self, lo: int, hi: int, snap: int) -> List[Tuple[int, int]]:
         return self.read_shards([(lo, hi)], snap)[0]
@@ -122,34 +123,24 @@ class StreamingSampleStore:
         snapshot, so all shards observe one consistent epoch regardless of
         concurrent ingest (the paper's streaming-analytics scan, batched
         across consumers instead of loop-per-consumer)."""
-        return uruv_batch.bulk_range_all(
-            self.store, [lo for lo, _ in bounds], [hi for _, hi in bounds],
+        return self.client.range_all(
+            [lo for lo, _ in bounds], [hi for _, hi in bounds],
             snap, scan_leaves=32, max_rounds=8,
         )
 
     def retire_below(self, sample_id: int, batch_width: int = 256) -> None:
-        snap = self.epoch_view()
-        try:
+        with self.client.snapshot() as snap:
             items = self.read_shard(0, sample_id - 1, snap)
-        finally:
-            self.release(snap)
         ids = np.array([k for k, _ in items], np.int32)
         for i in range(0, len(ids), batch_width):
-            chunk = ids[i : i + batch_width]
-            vals = np.full(chunk.shape, uruv_store.TOMBSTONE, np.int32)
-            self.store, _ = uruv_batch.apply_updates(self.store, chunk, vals)
+            self.client.apply(OpBatch.deletes(ids[i : i + batch_width]))
 
     def compact(self) -> int:
-        self.store, n_live = uruv_store.compact(self.store)
-        return int(n_live)
+        return self.client.compact()
 
     def live_count(self) -> int:
-        snap = self.epoch_view()
-        try:
-            items = self.read_shard(0, 2**31 - 3, snap)
-        finally:
-            self.release(snap)
-        return len(items)
+        with self.client.snapshot() as snap:
+            return len(self.read_shard(0, 2**31 - 3, snap))
 
 
 def epoch_iterator(

@@ -27,10 +27,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.api import OpBatch, Uruv, UruvConfig
 from repro.config import ArchConfig
-from repro.core import batch as uruv_batch
-from repro.core import store as uruv_store
-from repro.core.ref import OP_DELETE, OP_INSERT, OP_SEARCH
 from repro.models import transformer
 from repro.models.registry import get_model
 
@@ -66,7 +64,7 @@ class Engine:
         self.lengths = np.zeros(n_slots, np.int32)
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.queue: List[Request] = []
-        self.table = uruv_store.create(uruv_store.UruvConfig(
+        self.table = Uruv(UruvConfig(
             leaf_cap=16, max_leaves=1024, max_versions=1 << 14))
         self._slot_keys: Dict[int, List[int]] = {i: [] for i in range(n_slots)}
         self._is_tf = cfg.family in ("dense", "moe", "vlm") and cfg.vlm is None
@@ -106,12 +104,7 @@ class Engine:
         for plen in range(1, len(prompt) + 1):
             keys.append(prefix_hash(prompt[:plen]))
             plens.append(plen)
-        snap = int(np.asarray(self.table.ts))
-        vals = np.asarray(uruv_store.bulk_lookup(
-            self.table,
-            jnp.asarray(np.array(keys, np.int32)),
-            jnp.asarray(snap, jnp.int32),
-        ))
+        vals = self.table.lookup(np.array(keys, np.int32), pad_to_pow2=True)
         return self._select_donor(plens, vals)
 
     def _admission_pass(self, slot: int, prompt: List[int]) -> Tuple[int, int]:
@@ -127,15 +120,20 @@ class Engine:
         old_keys = self._slot_keys[slot]
         n = len(prompt)
         pkeys = [prefix_hash(prompt[:p]) for p in range(1, n + 1)]
-        ops = (
-            [(OP_DELETE, k, 0) for k in old_keys]
-            + [(OP_SEARCH, k, 0) for k in pkeys]
-            + [(OP_INSERT, k, (slot << 16) | p)
-               for p, k in enumerate(pkeys, start=1)]
+        plan = OpBatch.concat(
+            OpBatch.deletes(np.array(old_keys, np.int32)),
+            OpBatch.searches(np.array(pkeys, np.int32)),
+            OpBatch.inserts(
+                np.array(pkeys, np.int32),
+                np.array([(slot << 16) | p for p in range(1, n + 1)],
+                         np.int32),
+            ),
         )
-        self.table, res = uruv_batch.apply_batch(self.table, ops)
+        # pad_to_pow2: admission widths vary per prompt; bucketed shapes
+        # keep the table's jitted pass at O(log width) compiles total
+        res = self.table.apply(plan, pad_to_pow2=True)
         self._slot_keys[slot] = list(pkeys)
-        search_vals = res[len(old_keys):len(old_keys) + n]
+        search_vals = res.values[len(old_keys):len(old_keys) + n]
         return self._select_donor(range(1, n + 1), search_vals)
 
     def _copy_kv(self, dst: int, src: int, upto: int) -> None:
@@ -236,14 +234,11 @@ class Engine:
 
         All intervals share a single registered snapshot, so every consumer
         sees the same consistent table state (the "millions of users"
-        surface: one `bulk_range` call, Q = len(bounds))."""
-        self.table, snap = uruv_store.snapshot(self.table)
-        try:
-            views = uruv_batch.bulk_range_all(
-                self.table, [lo for lo, _ in bounds], [hi for _, hi in bounds],
-                int(snap), scan_leaves=32, max_rounds=8)
-        finally:
-            # release even on CapacityError: a leaked registration would pin
-            # min_active_ts and starve compact() forever
-            self.table = uruv_store.release(self.table, int(snap))
-        return views
+        surface: one `bulk_range` call, Q = len(bounds)).  The client's
+        snapshot context releases the registration even on CapacityError —
+        a leaked one would pin min_active_ts and starve compact() forever.
+        """
+        with self.table.snapshot() as snap:
+            return self.table.range_all(
+                [lo for lo, _ in bounds], [hi for _, hi in bounds],
+                snap, scan_leaves=32, max_rounds=8)

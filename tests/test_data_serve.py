@@ -126,7 +126,7 @@ def test_engine_generates_and_reuses_prefix(tiny_engine_setup):
     mid = view[len(view) // 2][0]
     lo_v, hi_v = eng.snapshot_views([(0, mid), (mid + 1, 2**31 - 3)])
     assert lo_v + hi_v == view
-    assert not bool(np.asarray(eng.table.trk_active).any())  # all released
+    assert eng.table.active_snapshots == 0                   # all released
 
 
 def test_engine_continuous_batching(tiny_engine_setup):
