@@ -1,4 +1,5 @@
-.PHONY: check test test-range api examples bench-kernels bench-mixed bench-range
+.PHONY: check test test-range api examples docs bench-kernels bench-mixed \
+	bench-range bench-lifecycle
 
 check:
 	bash scripts/check.sh
@@ -28,3 +29,13 @@ bench-mixed:
 
 bench-range:
 	PYTHONPATH=src python -m benchmarks.run --quick --only range
+
+# self-sizing lifecycle: incremental maintain vs stop-the-world compact,
+# grow amortization; writes BENCH_lifecycle.json
+bench-lifecycle:
+	PYTHONPATH=src python -m benchmarks.run --quick --only lifecycle
+
+# extract + run every fenced ```python block in README.md / DESIGN.md
+# under URUV_BACKEND=pallas_interpret (docs can never rot)
+docs:
+	PYTHONPATH=src python scripts/check_docs.py

@@ -17,6 +17,10 @@ workloads; see each section).  Figures:
   * range      — the batched device-resident ``bulk_range`` (Q intervals,
                  ONE jitted pass) vs the host-paginated per-query
                  ``range_query`` loop; writes BENCH_range.json.
+  * lifecycle  — self-sizing store costs: incremental ``maintain`` vs
+                 stop-the-world ``compact`` at matched reclamation, and
+                 auto-grow amortization vs a pre-sized pool; writes
+                 BENCH_lifecycle.json.
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick]
 """
@@ -32,7 +36,7 @@ import numpy as np
 from benchmarks import workloads as W
 from repro.api import (
     KEY_MAX, NOT_FOUND, TOMBSTONE, OP_DELETE, OP_INSERT, OP_SEARCH,
-    OpBatch, Uruv, UruvConfig,
+    LifecyclePolicy, OpBatch, Uruv, UruvConfig,
 )
 
 WIDTHS = [64, 256, 1024, 4096]
@@ -298,6 +302,141 @@ def range_bench(quick: bool = False, out_path: str = "BENCH_range.json") -> None
     Path(out_path).write_text(json.dumps(report, indent=2) + "\n")
 
 
+def lifecycle_bench(quick: bool = False,
+                    out_path: str = "BENCH_lifecycle.json") -> None:
+    """Self-sizing lifecycle costs (DESIGN.md Sec 10); BENCH_lifecycle.json.
+
+    (a) *Incremental maintain vs stop-the-world compact* at matched
+    reclamation: a store is driven to heavy garbage (frozen split-leavings
+    from sustained ingest + tombstones from a bulk delete), then the same
+    start state is reclaimed two ways — bounded ``maintain`` passes until
+    quiescence vs ONE ``compact()`` — and we report total time, per-pass
+    pause, and us per reclaimed leaf slot.  ``maintain``'s per-pass pause
+    is the serving-relevant number: it bounds the latency a reclamation
+    step can inject into an admission path.
+
+    (b) *Grow amortization*: ingest a working set that is ~32x the initial
+    leaf pool with auto-grow on, vs the same ingest into a pre-sized pool;
+    the delta is the total cost of all grow events + regrowth recompiles.
+    """
+    import time as _time
+
+    rng = np.random.default_rng(11)
+    ML0 = 1 << 10 if quick else 1 << 12
+    n_keys = (ML0 * 24)                     # ~75% of pool after splits
+    cfg = UruvConfig(leaf_cap=32, max_leaves=ML0, max_versions=1 << 18,
+                     max_chain=64)
+    manual = LifecyclePolicy(auto_grow=True, auto_maintain=False)
+    db = Uruv(cfg, policy=manual)
+    keys = rng.choice(20_000_000, n_keys, replace=False).astype(np.int32)
+    for i in range(0, n_keys, 2048):
+        db.apply(OpBatch.inserts(keys[i:i + 2048], keys[i:i + 2048] % 997 + 1))
+    dels = keys[rng.random(n_keys) < 0.6]
+    for i in range(0, len(dels), 2048):
+        db.apply(OpBatch.deletes(dels[i:i + 2048]))
+    s0 = db.store
+    n_alloc0 = int(np.asarray(s0.n_alloc))
+    budget = 256
+    report = {}
+
+    def drain(store):
+        """Maintain to quiescence -> (store, reclaimed, passes, max_pause_s)."""
+        from repro.api import LocalExecutor
+        ex = LocalExecutor(store.cfg, policy=manual)
+        total = passes = 0
+        max_pause = 0.0
+        while True:
+            t0 = _time.perf_counter()
+            store, rec, mer = ex.maintain(store, budget, phase=passes)
+            max_pause = max(max_pause, _time.perf_counter() - t0)
+            total += rec
+            passes += 1
+            if (rec == 0 and mer == 0) or passes > 256:
+                break
+        return store, total, passes, max_pause
+
+    drain(s0)                                # warmup (compiles)
+    times, recs, pauses, npasses = [], [], [], []
+    for _ in range(2 if quick else 3):
+        t0 = _time.perf_counter()
+        _, rec, passes, pause = drain(s0)
+        times.append(_time.perf_counter() - t0)
+        recs.append(rec)
+        pauses.append(pause)
+        npasses.append(passes)
+    m_us = float(np.min(times)) * 1e6
+    m_rec = recs[0]
+
+    db_c = Uruv.from_store(s0, policy=manual)
+    db_c.compact()                           # warmup (compiles)
+    ctimes, crecs = [], []
+    for _ in range(2 if quick else 3):
+        db_c = Uruv.from_store(s0, policy=manual)
+        t0 = _time.perf_counter()
+        db_c.compact()
+        ctimes.append(_time.perf_counter() - t0)
+        crecs.append(n_alloc0 - int(np.asarray(db_c.store.n_alloc)))
+    c_us = float(np.min(ctimes)) * 1e6
+    c_rec = crecs[0]
+
+    m_per_leaf = m_us / max(m_rec, 1)
+    c_per_leaf = c_us / max(c_rec, 1)
+    emit("lifecycle_maintain_total", m_us,
+         f"{m_rec}leaves/{npasses[0]}passes")
+    emit("lifecycle_maintain_max_pause", pauses[0] * 1e6, "1pass")
+    emit("lifecycle_compact_total", c_us, f"{c_rec}leaves/1pass")
+    emit("lifecycle_us_per_leaf_speedup", c_per_leaf / m_per_leaf,
+         f"{c_per_leaf / m_per_leaf:.2f}x")
+    report["maintain_vs_compact"] = {
+        "start_n_alloc": n_alloc0,
+        "maintain_total_us": round(m_us, 1),
+        "maintain_reclaimed": m_rec,
+        "maintain_passes": npasses[0],
+        "maintain_max_pause_us": round(pauses[0] * 1e6, 1),
+        "compact_total_us": round(c_us, 1),
+        "compact_reclaimed": c_rec,
+        "maintain_us_per_leaf": round(m_per_leaf, 2),
+        "compact_us_per_leaf": round(c_per_leaf, 2),
+        "speedup_us_per_leaf": round(c_per_leaf / m_per_leaf, 2),
+    }
+
+    # ---- (b) grow amortization: auto-grown vs pre-sized ingest ----------
+    g_keys = rng.choice(20_000_000, 1 << (14 if quick else 16),
+                        replace=False).astype(np.int32)
+    small = UruvConfig(leaf_cap=32, max_leaves=256, max_versions=1 << 12,
+                       max_chain=64)
+
+    def ingest(config):
+        dbi = Uruv(config)
+        t0 = _time.perf_counter()
+        for i in range(0, len(g_keys), 2048):
+            dbi.apply(OpBatch.inserts(g_keys[i:i + 2048],
+                                      g_keys[i:i + 2048] % 997 + 1))
+        return _time.perf_counter() - t0, dbi
+
+    ingest(small)                            # warmup (compiles every bucket)
+    g_sec, dbg = ingest(small)
+    big = UruvConfig(leaf_cap=32, max_leaves=dbg.capacity.max_leaves,
+                     max_versions=dbg.capacity.max_versions, max_chain=64)
+    ingest(big)                              # warmup
+    p_sec, _ = ingest(big)
+    overhead = (g_sec - p_sec) / p_sec
+    emit("lifecycle_grow_ingest", g_sec * 1e6,
+         f"{dbg.stats['grows']}grows")
+    emit("lifecycle_presized_ingest", p_sec * 1e6, "0grows")
+    emit("lifecycle_grow_overhead", overhead * 100, f"{overhead:+.1%}")
+    report["grow_amortization"] = {
+        "n_keys": len(g_keys),
+        "initial_max_leaves": small.max_leaves,
+        "final_max_leaves": dbg.capacity.max_leaves,
+        "grows": dbg.stats["grows"],
+        "auto_grow_ingest_us": round(g_sec * 1e6, 1),
+        "presized_ingest_us": round(p_sec * 1e6, 1),
+        "overhead_fraction": round(overhead, 3),
+    }
+    Path(out_path).write_text(json.dumps(report, indent=2) + "\n")
+
+
 def roofline_summary() -> None:
     """Dry-run roofline: dominant term for the hillclimbed cells (full
     table in EXPERIMENTS.md; reads experiments/dryrun artifacts)."""
@@ -326,7 +465,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="fig8|fig9|complexity|kernels|mixed|range|roofline")
+                    help="fig8|fig9|complexity|kernels|mixed|range|"
+                         "lifecycle|roofline")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     sections = {
@@ -336,6 +476,7 @@ def main() -> None:
         "kernels": lambda: kernels(args.quick),
         "mixed": lambda: mixed(args.quick),
         "range": lambda: range_bench(args.quick),
+        "lifecycle": lambda: lifecycle_bench(args.quick),
         "roofline": roofline_summary,
     }
     if args.only:

@@ -11,7 +11,7 @@ echo "== api layering gate (non-core modules go through repro.api only) =="
 # import statements only (prose mentions of repro.core.* in docstrings are
 # fine): `from repro.core import store`, `from repro.core.store import ...`,
 # `import repro.core.store`
-if grep -RnE "^[[:space:]]*(from repro\.core import [^#]*\b(store|batch|sharded)\b|from repro\.core\.(store|batch|sharded)\b|import repro\.core\.(store|batch|sharded)\b)" \
+if grep -RnE "^[[:space:]]*(from repro\.core import [^#]*\b(store|batch|sharded|lifecycle)\b|from repro\.core\.(store|batch|sharded|lifecycle)\b|import repro\.core\.(store|batch|sharded|lifecycle)\b)" \
      --include="*.py" --exclude-dir=core --exclude-dir=api \
      src/repro benchmarks examples scripts; then
   echo "ERROR: module bypasses repro.api (import core internals directly)"
@@ -35,11 +35,20 @@ python -m benchmarks.run --quick --only mixed
 echo "== batched bulk_range vs host-paged loop (quick; writes BENCH_range.json) =="
 python -m benchmarks.run --quick --only range
 
+echo "== lifecycle: maintain vs compact + grow amortization (quick; writes BENCH_lifecycle.json) =="
+python -m benchmarks.run --quick --only lifecycle
+
 echo "== BENCH_mixed.json =="
 cat BENCH_mixed.json
 
 echo "== BENCH_range.json =="
 cat BENCH_range.json
 
+echo "== BENCH_lifecycle.json =="
+cat BENCH_lifecycle.json
+
 echo "== examples under pallas_interpret (DeprecationWarning from repro = fail) =="
 python scripts/run_examples.py
+
+echo "== docs-that-run: README/DESIGN fenced python blocks under pallas_interpret =="
+python scripts/check_docs.py

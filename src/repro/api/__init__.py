@@ -9,9 +9,14 @@ talks to the store through this package only:
     range pages and resume frontiers.
   * :class:`Uruv`     — the client: ``apply(batch)``, convenience verbs,
     ``snapshot()`` context manager, ``range``/``range_all`` pagination,
-    ``compact()``.
+    lifecycle verbs ``maintain()``/``grow()``, ``compact()``.
   * :class:`LocalExecutor` / :class:`ShardedExecutor` — pluggable
     topology backends behind one executor contract (DESIGN.md Sec 9).
+  * :class:`LifecyclePolicy` — the self-sizing store lifecycle
+    (DESIGN.md Sec 10): auto-grow on capacity pressure + interleaved
+    incremental maintenance are ON by default; ``CapacityError`` (with
+    occupancy/frozen-fraction diagnostics) is the opt-in fixed-footprint
+    contract.
 
 Old entry points (``core.batch.apply_updates``, ``core.batch.
 range_query_all``, ``core.store.bulk_update``) are deprecated delegates
@@ -20,6 +25,7 @@ of this API.
 
 from repro.core.backend import get_backend, set_backend
 from repro.core.batch import CapacityError
+from repro.core.lifecycle import LifecyclePolicy
 from repro.core.ref import (
     KEY_MAX, NOT_FOUND, TOMBSTONE,
     OP_DELETE, OP_INSERT, OP_NOP, OP_RANGE, OP_SEARCH,
@@ -34,6 +40,7 @@ from repro.api.opbatch import OpBatch, RangePage, Result, make_result
 __all__ = [
     "CapacityError",
     "KEY_MAX",
+    "LifecyclePolicy",
     "LocalExecutor",
     "NOT_FOUND",
     "OP_DELETE",

@@ -33,36 +33,52 @@ from repro.core import store as _store
 from repro.core.ref import KEY_MAX
 
 from repro.api.executors import (
-    LocalExecutor, RangeOptions, ShardedExecutor,
+    LifecyclePolicy, LocalExecutor, RangeOptions, ShardedExecutor,
 )
 from repro.api.opbatch import OpBatch, RangePage, Result, make_result
 
 
 class Uruv:
-    """Stateful client over an immutable store + a pluggable executor."""
+    """Stateful client over an immutable store + a pluggable executor.
+
+    The store is SELF-SIZING by default (DESIGN.md Sec 10): capacity
+    pressure grows the flagged pool in place (device-resident power-of-two
+    doubling, bit-exact) and incremental ``maintain`` passes reclaim
+    retired split-leavings and merge underfull leaves when the frozen
+    fraction crosses the policy trigger — a client created with a small
+    ``UruvConfig`` serves an arbitrarily large working set without ever
+    raising ``CapacityError``.  Pass ``policy=LifecyclePolicy(
+    auto_grow=False, auto_maintain=False)`` for the fixed-footprint
+    (seed) behaviour.
+    """
 
     def __init__(self, config: Optional[_store.UruvConfig] = None, *,
-                 executor=None, store=None, backend: Optional[str] = None):
+                 executor=None, store=None, backend: Optional[str] = None,
+                 policy: Optional[LifecyclePolicy] = None):
         if executor is None:
-            executor = LocalExecutor(config, backend=backend)
+            executor = LocalExecutor(config, backend=backend, policy=policy)
         self.executor = executor
         self._store = store if store is not None else executor.create()
 
     # ----------------------------------------------------------- constructors
     @classmethod
     def sharded(cls, config, mesh, *, route_factor: int = 2,
-                routed: bool = True, store=None) -> "Uruv":
+                routed: bool = True, store=None,
+                policy: Optional[LifecyclePolicy] = None) -> "Uruv":
         """A client over a key-range-partitioned store on ``mesh`` (the
         ``config`` is a ``repro.core.sharded.ShardedConfig``)."""
         return cls(executor=ShardedExecutor(
             config, mesh, route_factor=route_factor, routed=routed,
+            policy=policy,
         ), store=store)
 
     @classmethod
-    def from_store(cls, store, *, backend: Optional[str] = None) -> "Uruv":
+    def from_store(cls, store, *, backend: Optional[str] = None,
+                   policy: Optional[LifecyclePolicy] = None) -> "Uruv":
         """Adopt an existing single-device store pytree (zero copies —
         stores are immutable, so the donor keeps its snapshot)."""
-        return cls(executor=LocalExecutor(store.cfg, backend=backend),
+        return cls(executor=LocalExecutor(store.cfg, backend=backend,
+                                          policy=policy),
                    store=store)
 
     # ----------------------------------------------------------------- state
@@ -77,8 +93,16 @@ class Uruv:
 
     @property
     def stats(self):
-        """Executor counters: device_passes / slow_path_rounds / compactions."""
+        """Executor counters: ``device_passes`` / ``slow_path_rounds`` /
+        ``compactions`` plus the lifecycle trio ``grows`` /
+        ``maintain_passes`` / ``leaves_reclaimed``."""
         return self.executor.stats
+
+    @property
+    def capacity(self):
+        """The LIVE capacities (``store.cfg``) — these move as the store
+        grows; the construction-time config keeps the initial sizes."""
+        return self._store.cfg
 
     @property
     def ts(self) -> int:
@@ -236,9 +260,35 @@ class Uruv:
 
     def compact(self) -> int:
         """Physically reclaim versions no active snapshot can read and
-        repack leaves (paper Appendix E); returns the live-key count."""
+        repack leaves (paper Appendix E); returns the live-key count.
+        Stop-the-world — prefer :meth:`maintain` for steady-state leaf
+        reclamation; compact remains the version-pool GC."""
         self._store, n_live = self.executor.compact(self._store)
         return n_live
+
+    # ------------------------------------------------------------- lifecycle
+    def maintain(self, budget: Optional[int] = None, *,
+                 phase: int = 0) -> Tuple[int, int]:
+        """ONE bounded incremental maintenance pass (DESIGN.md Sec 10):
+        purge tracker-dead keys, merge underfull neighbours, reclaim up to
+        ``budget`` retired leaf slots.  Returns ``(leaves_reclaimed,
+        pairs_merged)``; results at every registered snapshot are
+        byte-identical before and after.  Runs automatically on the policy
+        trigger — call it directly to schedule maintenance explicitly
+        (e.g. off-peak)."""
+        self._store, reclaimed, merged = self.executor.maintain(
+            self._store, budget, phase=phase,
+        )
+        return reclaimed, merged
+
+    def grow(self, *, leaves: bool = False, versions: bool = False,
+             tracker: bool = False) -> None:
+        """Double the selected pools now (device-resident, bit-exact).
+        Runs automatically on capacity pressure — call it directly to
+        pre-size ahead of a known ingest."""
+        self._store = self.executor.grow(
+            self._store, leaves=leaves, versions=versions, tracker=tracker,
+        )
 
     # ------------------------------------------------------------ inspection
     def live_items(self) -> List[Tuple[int, int]]:

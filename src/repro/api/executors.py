@@ -38,15 +38,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import batch as _batch
+from repro.core import lifecycle as _lifecycle
 from repro.core import sharded as _sharded
 from repro.core import store as _store
 from repro.api.opbatch import OpBatch, RangePage
 
 CapacityError = _batch.CapacityError
+LifecyclePolicy = _lifecycle.LifecyclePolicy
 
 
 def _new_stats() -> Dict[str, int]:
-    return {"device_passes": 0, "slow_path_rounds": 0, "compactions": 0}
+    return {"device_passes": 0, "slow_path_rounds": 0, "compactions": 0,
+            "grows": 0, "maintain_passes": 0, "leaves_reclaimed": 0}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,12 +67,26 @@ class LocalExecutor:
     ``backend`` pins the kernel backend (xla | pallas | pallas_interpret)
     for every pass this executor issues; None follows the process-wide
     ``repro.core.backend`` resolution (URUV_BACKEND / set_backend).
+
+    ``policy`` is the store lifecycle (DESIGN.md Sec 10): with the default
+    self-sizing policy the executor grows the rejected pool on capacity
+    overflow (power-of-two device-resident doubling, bit-exact) and
+    interleaves bounded incremental ``lifecycle.maintain`` passes when the
+    frozen/dead fraction of the leaf pool crosses the trigger — no
+    steady-state ``CapacityError``.  ``policy=LifecyclePolicy(
+    auto_grow=False, auto_maintain=False)`` restores the seed
+    fixed-footprint behaviour.  Note the live capacities are carried by
+    ``store.cfg`` (the construction-time ``config`` keeps the *initial*
+    sizes once growth has occurred).
     """
 
     def __init__(self, config: Optional[_store.UruvConfig] = None, *,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None,
+                 policy: Optional[LifecyclePolicy] = None):
         self.config = config or _store.UruvConfig()
         self.backend = backend
+        self.policy = policy if policy is not None \
+            else _lifecycle.DEFAULT_POLICY
         self.stats = _new_stats()
 
     # ------------------------------------------------------------- lifecycle
@@ -78,6 +95,32 @@ class LocalExecutor:
 
     def ts(self, store) -> int:
         return int(np.asarray(store.ts))
+
+    def grow(self, store, *, leaves: bool = False, versions: bool = False,
+             tracker: bool = False):
+        self.stats["grows"] += 1
+        return _lifecycle.grow(store, leaves=leaves, versions=versions,
+                               tracker=tracker)
+
+    def maintain(self, store, budget: Optional[int] = None, *,
+                 phase: int = 0):
+        store, reclaimed, merged = _lifecycle.maintain(
+            store,
+            budget if budget is not None else self.policy.maintain_budget,
+            phase=phase,
+        )
+        self.stats["maintain_passes"] += 1
+        self.stats["leaves_reclaimed"] += reclaimed
+        return store, reclaimed, merged
+
+    def _lifecycle_tick(self, store):
+        """Post-apply lifecycle interleave: proactive growth ahead of the
+        allocator wall, plus a bounded maintain burst on the frozen-
+        fraction trigger (both policy-gated; results are unaffected)."""
+        return _lifecycle.lifecycle_tick(
+            store, self.policy, stats=self.stats,
+            grow_fn=lambda st: self.grow(st, leaves=True),
+        )
 
     # ----------------------------------------------------------------- write
     def apply(self, store, batch: OpBatch, *, light_path: bool = True,
@@ -88,8 +131,9 @@ class LocalExecutor:
             max_results=range_opts.max_results,
             scan_leaves=range_opts.scan_leaves,
             max_rounds=range_opts.max_rounds,
-            stats=self.stats,
+            stats=self.stats, policy=self.policy,
         )
+        store = self._lifecycle_tick(store)
         k2 = np.asarray(batch.values)
         range_items = [(pos, page, int(k2[pos])) for pos, page in range_pages]
         return store, values, range_items
@@ -159,6 +203,12 @@ class LocalExecutor:
 
     # --------------------------------------------------------- snapshots, GC
     def snapshot(self, store):
+        # proactive tracker growth: a full ring would silently drop the
+        # registration (OFLOW_TRACKER) — grow it first instead
+        if (self.policy.auto_grow
+                and int(np.asarray(store.trk_active).sum())
+                >= store.cfg.tracker_cap):
+            store = self.grow(store, tracker=True)
         store, ts = _store.snapshot(store)
         return store, int(ts)
 
@@ -183,17 +233,29 @@ class ShardedExecutor:
     execution including version timestamps (per-op global timestamps +
     the replicated clock; DESIGN.md Sec 3/8).
 
-    Capacity rejections have no sharded slow path: a fully-rejected
-    announce raises ``CapacityError`` (size shards for the working set).
+    Lifecycle decisions are REPLICATED across shards by construction: the
+    stacked store has one shape, so ``grow`` doubles every shard's pools
+    in the same device call and ``maintain`` runs vmapped over all shards
+    — shard shapes can never diverge, and because lifecycle passes touch
+    neither the clock nor version timestamps, sharded execution stays
+    bit-identical to local execution even when the two interleave
+    different grow/maintain schedules.  Capacity rejections relieve the
+    flagged pool (maintain burst / doubling / tracker-gated compact) and
+    retry, bounded by ``MAX_SLOWPATH_ROUNDS``; with ``auto_grow=False``
+    a fully-rejected announce raises ``CapacityError`` (size shards for
+    the working set — there is no sharded halving slow path).
     """
 
     def __init__(self, config: _sharded.ShardedConfig, mesh, *,
-                 route_factor: int = 2, routed: bool = True):
+                 route_factor: int = 2, routed: bool = True,
+                 policy: Optional[LifecyclePolicy] = None):
         self.config = config
         self.mesh = mesh
         self.n_shards = mesh.shape[config.axis_name]
         self.route_factor = route_factor
         self.routed = routed
+        self.policy = policy if policy is not None \
+            else _lifecycle.DEFAULT_POLICY
         self.stats = _new_stats()
         # SPMD factories are built lazily, cached per static config
         # (light_path for the apply passes, RangeOptions for range)
@@ -214,34 +276,93 @@ class ShardedExecutor:
             store, ts=jnp.full_like(store.ts, np.int32(ts))
         )
 
+    def _reshard(self, store):
+        """Pin a lifecycle-produced store back to the mesh sharding (grow /
+        vmapped maintain can leave leaves with inferred placements)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        return jax.device_put(
+            store, NamedSharding(self.mesh, P(self.config.axis_name))
+        )
+
+    def grow(self, store, *, leaves: bool = False, versions: bool = False,
+             tracker: bool = False):
+        """Double the selected pools on EVERY shard (one stacked device
+        op; shard shapes stay equal — the replicated-decision rule)."""
+        self.stats["grows"] += 1
+        return self._reshard(_lifecycle.grow(
+            store, leaves=leaves, versions=versions, tracker=tracker,
+        ))
+
+    def maintain(self, store, budget: Optional[int] = None, *,
+                 phase: int = 0):
+        """One vmapped incremental maintenance pass over all shards."""
+        store, reclaimed, merged = _lifecycle.maintain(
+            store,
+            budget if budget is not None else self.policy.maintain_budget,
+            phase=phase,
+        )
+        self.stats["maintain_passes"] += 1
+        self.stats["leaves_reclaimed"] += reclaimed
+        return self._reshard(store), reclaimed, merged
+
+    def _lifecycle_tick(self, store):
+        def maintain_fn(st, budget, phase):
+            st, rec, mer = _lifecycle.maintain(st, budget, phase=phase)
+            return self._reshard(st), rec, mer
+
+        return _lifecycle.lifecycle_tick(
+            store, self.policy, stats=self.stats,
+            grow_fn=lambda st: self.grow(st, leaves=True),
+            maintain_fn=maintain_fn,
+        )
+
     # ----------------------------------------------------------------- write
     def _apply_crud(self, store, codes, keys, values, light_path: bool):
         """One CRUD segment; timestamps come from the replicated clock
         (``store.ts``, restated after range segments by the shared
         apply_mixed loop), so op i of the segment runs at the global
-        ``store.ts + i``."""
-        apply_fn = self._apply_fns.get(light_path)
-        if apply_fn is None:
-            apply_fn = _sharded.make_apply(self.config, self.mesh,
-                                           light_path=light_path)
-            self._apply_fns[light_path] = apply_fn
-        routed = None
-        if self.routed and len(codes) % self.n_shards == 0:
-            routed = self._routed_fns.get(light_path)
-            if routed is None:
-                routed = _sharded.make_routed_apply(
-                    self.config, self.mesh, route_factor=self.route_factor,
-                    light_path=light_path,
+        ``store.ts + i``.  Capacity rejections relieve pressure on every
+        shard at once (the stacked pools share one shape) and retry —
+        lifecycle steps never move the clock, so the retried pass applies
+        at exactly the rejected pass's timestamps."""
+        for _ in range(_batch.MAX_SLOWPATH_ROUNDS):
+            apply_fn = self._apply_fns.get(light_path)
+            if apply_fn is None:
+                apply_fn = _sharded.make_apply(self.config, self.mesh,
+                                               light_path=light_path)
+                self._apply_fns[light_path] = apply_fn
+            routed = None
+            if self.routed and len(codes) % self.n_shards == 0:
+                routed = self._routed_fns.get(light_path)
+                if routed is None:
+                    routed = _sharded.make_routed_apply(
+                        self.config, self.mesh,
+                        route_factor=self.route_factor,
+                        light_path=light_path,
+                    )
+                    self._routed_fns[light_path] = routed
+            try:
+                store, res = _sharded.sharded_apply_batch(
+                    store, codes, keys, values,
+                    apply_fn=apply_fn, routed_fn=routed, stats=self.stats,
                 )
-                self._routed_fns[light_path] = routed
-        try:
-            store, res = _sharded.sharded_apply_batch(
-                store, codes, keys, values,
-                apply_fn=apply_fn, routed_fn=routed, stats=self.stats,
-            )
-        except RuntimeError as e:        # full rejection: executor contract
-            raise CapacityError(str(e)) from e
-        return store, np.asarray(res)
+                return store, np.asarray(res)
+            except RuntimeError as e:    # full rejection: relieve + retry
+                reason = getattr(e, "oflow_reason", 0)
+                grow_bits = reason & (_store.OFLOW_LEAVES
+                                      | _store.OFLOW_VERSIONS)
+                if not (self.policy.auto_grow and grow_bits):
+                    raise CapacityError(str(e), store=store,
+                                        oflow=reason) from e
+                self.stats["slow_path_rounds"] += 1
+                store = self._reshard(_lifecycle.relieve_pressure(
+                    store, grow_bits, len(codes), self.policy,
+                    stats=self.stats,
+                ))
+        raise CapacityError(
+            "sharded capacity retries failed to converge", store=store,
+        )
 
     def apply(self, store, batch: OpBatch, *, light_path: bool = True,
               range_opts: RangeOptions = RangeOptions()):
@@ -258,6 +379,7 @@ class ShardedExecutor:
             get_ts_fn=self.ts,
             set_ts_fn=self._set_ts,
         )
+        store = self._lifecycle_tick(store)
         k2 = np.asarray(batch.values)
         range_items = [(pos, page, int(k2[pos])) for pos, page in range_pages]
         return store, values, range_items
@@ -311,6 +433,10 @@ class ShardedExecutor:
 
     # --------------------------------------------------------- snapshots, GC
     def snapshot(self, store):
+        if (self.policy.auto_grow
+                and int(np.asarray(store.trk_active)[0].sum())
+                >= store.cfg.tracker_cap):
+            store = self.grow(store, tracker=True)   # replicated ring is full
         store, snap = _sharded.sharded_snapshot(store)
         return store, int(snap)
 

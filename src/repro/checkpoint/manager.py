@@ -57,7 +57,8 @@ class CheckpointManager:
         self._load_existing()
 
     # ------------------------------------------------------------------ save
-    def save(self, state, step: int) -> None:
+    def save(self, state, step: int,
+             extra: Optional[Dict[str, Any]] = None) -> None:
         self.wait()                              # one in-flight snapshot
         host = jax.tree.map(np.asarray, jax.device_get(state))
 
@@ -67,7 +68,7 @@ class CheckpointManager:
             if tmp.exists():
                 shutil.rmtree(tmp)
             tmp.mkdir()
-            manifest = {"step": step, "leaves": []}
+            manifest = {"step": step, "leaves": [], **(extra or {})}
             for name, leaf in _flatten(host):
                 fn = name.replace("/", "__") + ".npy"
                 np.save(tmp / fn, leaf)
@@ -131,6 +132,49 @@ class CheckpointManager:
         else:
             host_tree = jax.tree.map(jax.device_put, host_tree)
         return host_tree, step
+
+    # ------------------------------------------------- store-aware round-trip
+    def save_store(self, store, step: int) -> None:
+        """Checkpoint an UruvStore (local or stacked/sharded) with its LIVE
+        capacities recorded in the manifest, so :meth:`restore_store`
+        round-trips across lifecycle growth — a store that grew from 4K to
+        64K leaves restores with exactly its grown shapes, no ``like``
+        template required (DESIGN.md Sec 10)."""
+        cfg = store.cfg
+        shards = int(np.asarray(store.ts).shape[0]) \
+            if np.asarray(store.ts).ndim else 0
+        self.save(store, step, extra={
+            "uruv_config": dataclasses.asdict(cfg),
+            "uruv_shards": shards,
+        })
+
+    def restore_store(self, step: Optional[int] = None, shardings=None):
+        """Rebuild the UruvStore saved by :meth:`save_store`: the manifest's
+        recorded ``UruvConfig`` regenerates the exact (possibly grown)
+        template, elastic across meshes via ``shardings`` as in
+        :meth:`restore`.  Returns ``(store, step)``."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError("no complete checkpoint found")
+        man_dir = self.dir / f"step_{step:08d}"
+        manifest = json.loads((man_dir / "manifest.json").read_text())
+        if "uruv_config" not in manifest:
+            raise ValueError(
+                f"checkpoint step {step} was not written by save_store"
+            )
+        cfg = UruvConfig(**manifest["uruv_config"])
+        # shape-only template: a grown store can be huge, so never
+        # materialize it on device just to recover names + treedef
+        like = jax.eval_shape(lambda: Uruv(cfg).store)
+        if manifest.get("uruv_shards"):
+            n = int(manifest["uruv_shards"])
+            like = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype),
+                like,
+            )
+        return self.restore(like, step, shardings=shardings)
 
     # -------------------------------------------------------------------- gc
     def _gc(self) -> None:

@@ -31,12 +31,47 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 import jax.numpy as jnp
 
+from repro.core import lifecycle as LC
 from repro.core import store as S
 from repro.core.ref import KEY_MAX, NOT_FOUND, OP_RANGE
 
 
 class CapacityError(RuntimeError):
-    """Raised when the store cannot fit the working set even after compact()."""
+    """The store cannot fit the working set under the active policy.
+
+    With the default self-sizing lifecycle (``LifecyclePolicy.auto_grow``)
+    this is no longer a steady-state condition — it is raised only when
+    growth is disabled, a single op violates ``leaf_cap``, or the bounded
+    retry loops fail to converge.  Carries diagnostics:
+
+      * ``oflow``      — the ``OFLOW_*`` bitmask of the last rejection
+      * ``occupancy``  — leaf-allocator occupancy ``n_alloc / max_leaves``
+      * ``frozen_fraction`` — dead (unreferenced-but-allocated) fraction
+      * ``n_vers`` / ``max_versions`` — version-pool fill
+    """
+
+    def __init__(self, message: str, *, store: Optional[S.UruvStore] = None,
+                 oflow: int = 0):
+        self.oflow = int(oflow)
+        self.occupancy = 0.0
+        self.frozen_fraction = 0.0
+        self.n_vers = 0
+        self.max_versions = 0
+        if store is not None:
+            n_alloc = int(np.asarray(store.n_alloc).sum())
+            self.occupancy = n_alloc / max(
+                int(store.cfg.max_leaves) * np.asarray(store.ts).size, 1
+            )
+            self.frozen_fraction = LC.dead_fraction(store)
+            self.n_vers = int(np.asarray(store.n_vers).max())
+            self.max_versions = int(store.cfg.max_versions)
+            message = (
+                f"{message} [oflow={self.oflow:#x} "
+                f"occupancy={self.occupancy:.2f} "
+                f"frozen_fraction={self.frozen_fraction:.2f} "
+                f"versions={self.n_vers}/{self.max_versions}]"
+            )
+        super().__init__(message)
 
 
 MAX_SLOWPATH_ROUNDS = 64
@@ -62,6 +97,7 @@ def _apply_rounds(
     light_path: bool = True,
     backend: Optional[str] = None,
     stats: Optional[Dict[str, int]] = None,
+    policy: Optional[LC.LifecyclePolicy] = None,
     _depth: int = 0,
 ) -> Tuple[S.UruvStore, np.ndarray]:
     """One fast-path attempt + bounded help-rounds on rejection.
@@ -72,9 +108,19 @@ def _apply_rounds(
     round applies its ops at exactly the timestamps the one-pass
     application would have used.  ``stats`` (see ``repro.api``) counts
     every device pass and slow-path round.
+
+    Capacity policy (DESIGN.md Sec 10): with a ``policy`` whose
+    ``auto_grow`` is set (the ``repro.api`` default), ``OFLOW_LEAVES`` /
+    ``OFLOW_VERSIONS`` rejections run one ``lifecycle.relieve_pressure``
+    step (incremental maintain, pool doubling, or tracker-gated compact)
+    and retry — no steady-state ``CapacityError``.  ``policy=None`` keeps
+    the legacy fixed-footprint behaviour: compact-then-retry, error when
+    compaction frees nothing.  Lifecycle choices never alter results or
+    timestamps, only where the arrays live.
     """
     if _depth > MAX_SLOWPATH_ROUNDS:
-        raise CapacityError("slow path failed to converge; store too small")
+        raise CapacityError("slow path failed to converge; store too small",
+                            store=store)
     _bump(stats, "device_passes")
     new_store, res, ok = S.bulk_apply(
         store, codes, keys, values, op_ts=op_ts, next_ts=next_ts,
@@ -85,6 +131,14 @@ def _apply_rounds(
     _bump(stats, "slow_path_rounds")
     reason = int(new_store.oflow) & ~int(store.oflow)
     if reason & (S.OFLOW_VERSIONS | S.OFLOW_LEAVES):
+        if policy is not None and policy.auto_grow:
+            relieved = LC.relieve_pressure(
+                _clear_oflow(store), reason, len(keys), policy, stats=stats,
+            )
+            return _apply_rounds(relieved, codes, keys, values, op_ts,
+                                 next_ts, light_path=light_path,
+                                 backend=backend, stats=stats, policy=policy,
+                                 _depth=_depth + 1)
         _bump(stats, "compactions")
         compacted, _ = S.compact(_clear_oflow(store))
         # progress check on the actual constrained resources: the version
@@ -97,15 +151,17 @@ def _apply_rounds(
             raise CapacityError(
                 f"store full (versions={int(store.n_vers)}/"
                 f"{store.cfg.max_versions}, "
-                f"leaves={int(store.n_alloc)}/{store.cfg.max_leaves})"
+                f"leaves={int(store.n_alloc)}/{store.cfg.max_leaves})",
+                store=store, oflow=reason,
             )
         return _apply_rounds(compacted, codes, keys, values, op_ts, next_ts,
                              light_path=light_path, backend=backend,
-                             stats=stats, _depth=_depth + 1)
+                             stats=stats, policy=policy, _depth=_depth + 1)
     # OFLOW_LEAFBATCH: help in rounds — halve the announce array, keeping
     # the per-op timestamp assignment of the rejected one-pass attempt.
     if len(keys) == 1:
-        raise CapacityError("single op rejected; leaf_cap too small")
+        raise CapacityError("single op rejected; leaf_cap too small",
+                            store=store, oflow=reason)
     if op_ts is None:
         base = int(store.ts)
         op_ts = (base + np.arange(len(keys))).astype(np.int32)
@@ -116,11 +172,11 @@ def _apply_rounds(
     st, res_a = _apply_rounds(st, codes[:mid], keys[:mid], values[:mid],
                               op_ts[:mid], int(op_ts[mid]),
                               light_path=light_path, backend=backend,
-                              stats=stats, _depth=_depth + 1)
+                              stats=stats, policy=policy, _depth=_depth + 1)
     st, res_b = _apply_rounds(st, codes[mid:], keys[mid:], values[mid:],
                               op_ts[mid:], next_ts,
                               light_path=light_path, backend=backend,
-                              stats=stats, _depth=_depth + 1)
+                              stats=stats, policy=policy, _depth=_depth + 1)
     return st, np.concatenate([res_a, res_b])
 
 
@@ -160,6 +216,7 @@ def apply_mixed(
     scan_leaves: int = 16,
     max_rounds: int = 8,
     stats: Optional[Dict[str, int]] = None,
+    policy: Optional[LC.LifecyclePolicy] = None,
     crud_fn=None,
     range_all_fn=None,
     get_ts_fn=None,
@@ -202,7 +259,7 @@ def apply_mixed(
         def crud_fn(st, c, k, v, op_ts, next_ts):
             return _apply_rounds(st, c, k, v, op_ts, next_ts,
                                  light_path=light_path, backend=backend,
-                                 stats=stats)
+                                 stats=stats, policy=policy)
     if range_all_fn is None:
         def range_all_fn(st, k1, k2, snaps):
             return bulk_range_all(

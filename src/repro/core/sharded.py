@@ -303,8 +303,11 @@ def sharded_apply_batch(store, codes, keys, values, *, apply_fn,
     """Host fast/slow sequencing: routed pass first, replicated fallback.
 
     Returns (store, results[G]).  Raises RuntimeError if even the
-    replicated pass rejects (capacity; compact + retry is the caller's
-    policy, mirroring repro.core.batch).  CRUD codes only: the SPMD passes
+    replicated pass rejects (capacity); the error carries the OR of the
+    rejecting shards' fresh ``OFLOW_*`` bits as ``.oflow_reason`` so the
+    caller's lifecycle policy (grow / maintain / compact + retry — see
+    ``repro.api.ShardedExecutor``) can relieve the right pool, mirroring
+    repro.core.batch.  CRUD codes only: the SPMD passes
     are built on `store.bulk_apply`, which treats OP_RANGE as NOP — range
     announce arrays go through :func:`make_range_apply` instead, so reject
     them loudly here rather than silently returning NOT_FOUND.
@@ -329,10 +332,15 @@ def sharded_apply_batch(store, codes, keys, values, *, apply_fn,
         store, jnp.asarray(codes), jnp.asarray(keys), jnp.asarray(values)
     )
     if not bool(ok):
-        raise RuntimeError(
+        reason = int(np.bitwise_or.reduce(
+            np.asarray(new_store.oflow).reshape(-1))) & ~int(
+            np.bitwise_or.reduce(np.asarray(store.oflow).reshape(-1)))
+        err = RuntimeError(
             "sharded announce rejected by every shard path (capacity); "
-            "compact or widen the shard stores"
+            "grow/compact or widen the shard stores"
         )
+        err.oflow_reason = reason
+        raise err
     return new_store, np.asarray(res)
 
 

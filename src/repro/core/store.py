@@ -13,8 +13,12 @@ Structure (DESIGN.md Sec 2):
     split/merge (restructuring never cascades; one deterministic pass).
   * Version pool — SoA ``Vnode``s: ``ver_value/ver_ts/ver_next`` with a bump
     allocator.  DELETE writes a TOMBSTONE version (paper Sec 3.2); physical
-    reclamation happens in :func:`compact`, gated by the version tracker
-    (paper Appendix E).
+    reclamation is incremental in steady state (``repro.core.lifecycle.
+    maintain`` purges dead keys and reclaims retired leaves) with
+    :func:`compact` as the rare stop-the-world version-pool GC — both
+    gated by the version tracker (paper Appendix E).  Pools are not a
+    wall: ``lifecycle.grow`` doubles them device-resident on pressure
+    (DESIGN.md Sec 10).
   * Version tracker — ring of (snapshot ts, active) entries; ``min_active_ts``
     gates GC.
 
@@ -881,10 +885,22 @@ def bulk_range(
 
 @jax.jit
 def snapshot(store: UruvStore) -> Tuple[UruvStore, jax.Array]:
-    """RANGEQUERY LP: read the clock, register in the tracker ring."""
+    """RANGEQUERY LP: read the clock, register in the tracker ring.
+
+    Registers in a FREE slot whenever one exists (long-held registrations
+    are never evicted by churning short-lived ones — the incremental
+    maintenance of ``repro.core.lifecycle`` relies on ``min_active_ts``
+    honouring every live registration); only a genuinely full ring evicts
+    the cursor slot and flags ``OFLOW_TRACKER`` (under the default
+    lifecycle policy the executor grows the ring before that happens).
+    """
     snap = store.ts
-    cur = store.trk_cursor % store.cfg.tracker_cap
-    lost = store.trk_active[cur]  # ring full: cannot register -> flag
+    free = ~store.trk_active
+    lost = ~jnp.any(free)         # ring truly full: evict + flag
+    cur = jnp.where(
+        lost, store.trk_cursor % store.cfg.tracker_cap,
+        jnp.argmax(free).astype(jnp.int32),
+    )
     trk_ts = store.trk_ts.at[cur].set(snap)
     trk_active = store.trk_active.at[cur].set(True)
     new = dataclasses.replace(

@@ -64,8 +64,14 @@ class Engine:
         self.lengths = np.zeros(n_slots, np.int32)
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.queue: List[Request] = []
+        # The table starts SMALL and self-sizes: admission churn retires
+        # prefix entries (tombstones + split-leavings) continuously, and
+        # the client's lifecycle policy grows pools on pressure and
+        # interleaves incremental maintain passes — the engine runs
+        # indefinitely with no CapacityError and no stop-the-world
+        # compaction pauses on the admission path (DESIGN.md Sec 10).
         self.table = Uruv(UruvConfig(
-            leaf_cap=16, max_leaves=1024, max_versions=1 << 14))
+            leaf_cap=16, max_leaves=256, max_versions=1 << 12))
         self._slot_keys: Dict[int, List[int]] = {i: [] for i in range(n_slots)}
         self._is_tf = cfg.family in ("dense", "moe", "vlm") and cfg.vlm is None
 
@@ -220,6 +226,12 @@ class Engine:
             if len(done) == len(requests):
                 break
         return requests
+
+    @property
+    def table_stats(self) -> Dict[str, int]:
+        """Store-lifecycle observability for the serving dashboard:
+        device passes, grows, maintain passes, leaves reclaimed."""
+        return dict(self.table.stats)
 
     # scheduler view: consistent snapshot of in-flight work.  One
     # `bulk_range` device pass serves the whole table (in-pass pagination;

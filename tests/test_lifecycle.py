@@ -1,0 +1,422 @@
+"""Lifecycle battery: self-sizing growth + incremental maintenance.
+
+Covers DESIGN.md Sec 10:
+  * grow() is bit-exact (ids, timestamps, directory, tracker preserved);
+  * maintain() reclaims frozen split-leavings, merges underfull
+    neighbours, and keeps every registered snapshot byte-stable;
+  * the capacity-pressure property test: sustained random CRUD through
+    ``repro.api`` to >8x the initial leaf pool with ZERO CapacityError,
+    oracle (RefStore) equivalence throughout, and the frozen-leaf
+    accounting invariant (allocated == live + frozen-dead) at every step;
+  * CapacityError diagnostics when growth is disabled;
+  * checkpoint round-trips across capacity changes;
+  * sharded (4 fake devices) lifecycle == local, bit-identical including
+    version timestamps (subprocess; jax pins the device count at init).
+"""
+
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import lifecycle as LC
+from repro.core import store as S
+from repro.core.ref import OP_DELETE, OP_INSERT, OP_SEARCH, RefStore
+from repro import api
+
+
+def _small_cfg(**kw):
+    base = dict(leaf_cap=8, max_leaves=64, max_versions=1 << 11,
+                tracker_cap=16, max_chain=16)
+    base.update(kw)
+    return api.UruvConfig(**base)
+
+
+def _assert_accounting(store):
+    """Every allocated slot is live (directory-referenced) or frozen-dead:
+    ``n_alloc - reclaimed == live + frozen`` at all times."""
+    acc = LC.leaf_accounting(store)
+    assert acc["n_alloc"] == acc["live"] + acc["dead"], acc
+    # frozen flags and directory references must be disjoint
+    s = jax.device_get(store)
+    frozen = np.atleast_2d(np.asarray(s.leaf_frozen))
+    dir_leaf = np.atleast_2d(np.asarray(s.dir_leaf))
+    n_leaves = np.atleast_1d(np.asarray(s.n_leaves))
+    for sh in range(frozen.shape[0]):
+        refd = dir_leaf[sh][: n_leaves[sh]]
+        assert not frozen[sh][refd].any(), "directory points at frozen leaf"
+
+
+def _ingest(db, ref, rng, n_rounds, width=96, p_ins=0.6, universe=200_000):
+    for _ in range(n_rounds):
+        r = rng.random(width)
+        codes = np.where(r < p_ins, OP_INSERT,
+                         np.where(r < p_ins + 0.2, OP_DELETE,
+                                  OP_SEARCH)).astype(np.int32)
+        keys = rng.integers(0, universe, width).astype(np.int32)
+        vals = (keys % 1000 + 1).astype(np.int32)
+        res = db.apply(api.OpBatch(codes, keys, vals))
+        if ref is not None:
+            want = ref.apply_batch(
+                [(int(c), int(k), int(v))
+                 for c, k, v in zip(codes, keys, vals)])
+            np.testing.assert_array_equal(np.asarray(res.values), want)
+
+
+# ---------------------------------------------------------------------------
+# grow
+# ---------------------------------------------------------------------------
+
+def test_grow_is_bit_exact():
+    db = api.Uruv(_small_cfg(),
+                  policy=api.LifecyclePolicy(auto_grow=False,
+                                             auto_maintain=False))
+    ref = RefStore()
+    _ingest(db, ref, np.random.default_rng(0), 4, width=48, universe=2000)
+    st = db.store
+    snap = int(st.ts) - 10
+    probe = jnp.arange(0, 2000, 7, dtype=jnp.int32)
+    before = np.asarray(S.bulk_lookup(st, probe, snap))
+
+    g = LC.grow(st, leaves=True, versions=True, tracker=True)
+    assert g.cfg.max_leaves == 2 * st.cfg.max_leaves
+    assert g.cfg.max_versions == 2 * st.cfg.max_versions
+    assert g.cfg.tracker_cap == 2 * st.cfg.tracker_cap
+    ml = st.cfg.max_leaves
+    for name in ("leaf_keys", "leaf_vhead", "leaf_count", "leaf_next",
+                 "leaf_newnext", "leaf_frozen", "leaf_ts", "dir_keys",
+                 "dir_leaf"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(g, name))[:ml], np.asarray(getattr(st, name)),
+            err_msg=name)
+    for name in ("ver_value", "ver_ts", "ver_next"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(g, name))[: st.cfg.max_versions],
+            np.asarray(getattr(st, name)), err_msg=name)
+    for name in ("n_alloc", "n_leaves", "n_vers", "ts", "trk_cursor"):
+        assert int(getattr(g, name)) == int(getattr(st, name)), name
+    S.check_invariants(g)
+    assert S.live_items(g) == ref.live_items()
+    # historic snapshot reads are unchanged through the grown store
+    np.testing.assert_array_equal(
+        np.asarray(S.bulk_lookup(g, probe, snap)), before)
+    # pow2 bucketing: growing a non-pow2 pool lands on the next bucket
+    assert LC.next_pool_size(48) == 64 and LC.next_pool_size(64) == 128
+
+
+# ---------------------------------------------------------------------------
+# maintain
+# ---------------------------------------------------------------------------
+
+def test_maintain_reclaims_frozen_and_merges():
+    # pre-sized pool: no capacity pressure, so frozen split-leavings
+    # accumulate untouched until the explicit maintain calls below
+    pol = api.LifecyclePolicy(auto_maintain=False)
+    db = api.Uruv(_small_cfg(max_leaves=1024, max_versions=1 << 13),
+                  policy=pol)
+    ref = RefStore()
+    rng = np.random.default_rng(1)
+    # dense ingest -> many splits -> frozen leavings
+    keys = rng.choice(4000, 1500, replace=False).astype(np.int32)
+    for i in range(0, len(keys), 96):
+        db.apply(api.OpBatch.inserts(keys[i:i + 96], keys[i:i + 96] % 97 + 1))
+        ref.apply_batch([(OP_INSERT, int(k), int(k) % 97 + 1)
+                         for k in keys[i:i + 96]])
+    acc0 = LC.leaf_accounting(db.store)
+    assert acc0["dead"] > 0, "ingest should leave frozen split-leavings"
+    # delete 80% of a contiguous region -> underfull leaves after purge
+    dels = np.sort(keys[keys < 3200])
+    dels = dels[rng.random(len(dels)) < 0.8].astype(np.int32)
+    for i in range(0, len(dels), 96):
+        db.apply(api.OpBatch.deletes(dels[i:i + 96]))
+        ref.apply_batch([(OP_DELETE, int(k), 0) for k in dels[i:i + 96]])
+
+    n_leaves0 = int(np.asarray(db.store.n_leaves))
+    total_rec = total_mer = 0
+    for p in range(12):
+        rec, mer = db.maintain(48, phase=p)
+        total_rec += rec
+        total_mer += mer
+        S.check_invariants(db.store)
+        _assert_accounting(db.store)
+    assert total_rec >= acc0["dead"], "frozen leavings were not reclaimed"
+    assert total_mer > 0, "underfull neighbours were not merged"
+    assert int(np.asarray(db.store.n_leaves)) < n_leaves0
+    assert db.live_items() == ref.live_items()
+    assert db.stats["maintain_passes"] == 12
+    assert db.stats["leaves_reclaimed"] == total_rec
+
+
+def test_maintain_keeps_registered_snapshots_byte_stable():
+    db = api.Uruv(_small_cfg(), policy=api.LifecyclePolicy(
+        auto_maintain=False))
+    rng = np.random.default_rng(2)
+    keys = rng.choice(5000, 800, replace=False).astype(np.int32)
+    db.insert(keys, keys % 211 + 1)
+    snap = db.acquire_snapshot()
+    probe = np.arange(0, 5000, 3, dtype=np.int32)
+    look0 = db.lookup(probe, snap)
+    range0 = db.range(0, 4999, snap)
+    # interleave updates (incl. deletes of snapshotted keys) + maintenance
+    db.delete(keys[::2])
+    db.insert(keys[1::4] + 1, 7)
+    for p in range(8):
+        db.maintain(64, phase=p)
+    db.grow(leaves=True, versions=True)
+    np.testing.assert_array_equal(db.lookup(probe, snap), look0)
+    assert db.range(0, 4999, snap) == range0
+    db.release_snapshot(snap)
+    # with the registration gone the floor advances: maintenance now
+    # purges the tombstoned keys PHYSICALLY (pool occupancy drops) while
+    # live contents and current-clock reads are untouched
+    lk0 = LC.live_key_count(db.store)
+    want_live = db.live_items()
+    now = db.ts
+    for p in range(8):
+        db.maintain(64, phase=p)
+    assert LC.live_key_count(db.store) < lk0
+    assert db.live_items() == want_live
+    # purged keys stay gone (excluding ones the later insert resurrected)
+    reinserted = set((keys[1::4] + 1).tolist())
+    purged = np.array([k for k in keys[::2].tolist()
+                       if k not in reinserted], np.int32)
+    assert len(purged) and all(
+        v == api.NOT_FOUND for v in db.lookup(purged, now))
+
+
+# ---------------------------------------------------------------------------
+# the capacity-pressure property test (acceptance)
+# ---------------------------------------------------------------------------
+
+def test_sustained_crud_grows_past_8x_with_oracle():
+    """>8x the seed leaf pool through repro.api: zero CapacityError,
+    RefStore equivalence throughout, accounting invariant, snapshot
+    stability across interleaved automatic maintenance."""
+    cfg = _small_cfg()                     # 64-leaf seed pool
+    db = api.Uruv(cfg)                     # DEFAULT policy: self-sizing
+    ref = RefStore()
+    rng = np.random.default_rng(3)
+    width = 128
+    snap = None
+    snap_expect = None
+    probe = np.arange(0, 400_000, 1013, dtype=np.int32)
+    for rnd in range(70):
+        r = rng.random(width)
+        codes = np.where(r < 0.7, OP_INSERT,
+                         np.where(r < 0.85, OP_DELETE,
+                                  OP_SEARCH)).astype(np.int32)
+        keys = rng.integers(0, 400_000, width).astype(np.int32)
+        vals = (keys % 1000 + 1).astype(np.int32)
+        res = db.apply(api.OpBatch(codes, keys, vals))
+        want = ref.apply_batch([(int(c), int(k), int(v))
+                                for c, k, v in zip(codes, keys, vals)])
+        np.testing.assert_array_equal(np.asarray(res.values), want)
+        if rnd % 10 == 0:
+            _assert_accounting(db.store)
+        if rnd == 30:                      # pin a mid-run snapshot
+            snap = db.acquire_snapshot()
+            snap_expect = db.lookup(probe, snap)
+    assert db.capacity.max_leaves >= 8 * cfg.max_leaves, (
+        f"grew only to {db.capacity.max_leaves}")
+    assert int(np.asarray(db.store.n_alloc)) > 8 * cfg.max_leaves // 2
+    assert db.stats["grows"] >= 3
+    assert db.stats["leaves_reclaimed"] > 0, "maintenance never interleaved"
+    # the pinned snapshot survived every grow/maintain since round 30
+    np.testing.assert_array_equal(db.lookup(probe, snap), snap_expect)
+    db.release_snapshot(snap)
+    assert db.live_items() == ref.live_items()
+    S.check_invariants(db.store)
+    _assert_accounting(db.store)
+    # and ranges still match the oracle at the final clock
+    with db.snapshot() as ts:
+        assert db.range(0, 400_000, ts) == ref.range_query(0, 400_000,
+                                                           ref.ts)
+
+
+def test_held_snapshot_survives_tracker_churn_and_maintain():
+    """Regression: the tracker ring must never evict a HELD registration
+    while free slots exist — transient snapshot/release churn past
+    tracker_cap used to wrap the cursor onto the held slot, after which
+    maintenance purged data the snapshot could still read."""
+    db = api.Uruv(_small_cfg(tracker_cap=8))
+    keys = np.arange(100, dtype=np.int32)
+    db.insert(keys, keys + 41)
+    held = db.acquire_snapshot()
+    want = db.lookup(keys, held)
+    assert int(want[0]) == 41
+    for _ in range(3 * db.capacity.tracker_cap):   # churn: register+release
+        with db.snapshot():
+            pass
+    db.delete(keys)                                 # tombstones after held
+    for p in range(6):
+        db.maintain(64, phase=p)
+    assert db.active_snapshots >= 1                 # registration survived
+    np.testing.assert_array_equal(db.lookup(keys, held), want)
+    db.release_snapshot(held)
+
+
+def test_tracker_grows_instead_of_dropping_registrations():
+    db = api.Uruv(_small_cfg(tracker_cap=4))
+    db.insert([1, 2, 3], [10, 20, 30])
+    snaps = [db.acquire_snapshot() for _ in range(9)]
+    assert db.capacity.tracker_cap >= 9
+    assert int(np.asarray(db.store.oflow)) & S.OFLOW_TRACKER == 0
+    assert db.active_snapshots == 9
+    for s in snaps:
+        db.release_snapshot(s)
+    assert db.active_snapshots == 0
+
+
+# ---------------------------------------------------------------------------
+# CapacityError diagnostics (growth disabled)
+# ---------------------------------------------------------------------------
+
+def test_capacity_error_diagnostics_when_growth_disabled():
+    tiny = api.UruvConfig(leaf_cap=4, max_leaves=8, max_versions=64,
+                          max_chain=8)
+    db = api.Uruv(tiny, policy=api.LifecyclePolicy(auto_grow=False,
+                                                   auto_maintain=False))
+    keys = np.arange(0, 64, dtype=np.int32)
+    with pytest.raises(api.CapacityError) as ei:
+        for i in range(0, 64, 8):
+            db.apply(api.OpBatch.inserts(keys[i:i + 8], keys[i:i + 8]))
+    err = ei.value
+    assert err.oflow & (S.OFLOW_LEAVES | S.OFLOW_VERSIONS)
+    assert err.occupancy > 0.5
+    assert 0.0 <= err.frozen_fraction <= 1.0
+    assert err.max_versions == 64
+    assert "occupancy=" in str(err)
+    # the same workload under the default policy completes
+    db2 = api.Uruv(tiny)
+    for i in range(0, 64, 8):
+        db2.apply(api.OpBatch.inserts(keys[i:i + 8], keys[i:i + 8]))
+    assert len(db2.live_items()) == 64
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round-trip across capacity changes
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_across_grow(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    db = api.Uruv(_small_cfg())
+    ref = RefStore()
+    _ingest(db, ref, np.random.default_rng(4), 3, width=48, universe=2000)
+    mgr.save_store(db.store, step=1)
+
+    _ingest(db, ref, np.random.default_rng(5), 20, width=96,
+            universe=100_000)
+    assert db.capacity.max_leaves > _small_cfg().max_leaves  # grew
+    mgr.save_store(db.store, step=2)
+
+    for step, want in ((1, None), (2, db.store)):
+        got, got_step = mgr.restore_store(step=step)
+        assert got_step == step
+        if want is not None:
+            assert got.cfg == want.cfg
+            for (pa, a), (pb, b) in zip(
+                    jax.tree_util.tree_flatten_with_path(got)[0],
+                    jax.tree_util.tree_flatten_with_path(want)[0]):
+                np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(b), err_msg=str(pa))
+    # the step-1 restore carries the PRE-growth capacities and is usable
+    got1, _ = mgr.restore_store(step=1)
+    assert got1.cfg.max_leaves == _small_cfg().max_leaves
+    S.check_invariants(got1)
+    # the step-2 restore matches the live client's contents
+    got2, _ = mgr.restore_store(step=2)
+    assert api.Uruv.from_store(got2).live_items() == db.live_items()
+
+    # stacked (sharded-shaped) stores round-trip too
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (2,) + x.shape), db.store)
+    mgr.save_store(stacked, step=3)
+    got3, _ = mgr.restore_store(step=3)
+    assert np.asarray(got3.ts).shape == (2,)
+    np.testing.assert_array_equal(np.asarray(got3.leaf_keys),
+                                  np.asarray(stacked.leaf_keys))
+
+
+# ---------------------------------------------------------------------------
+# sharded lifecycle == local, bit-identical (4 fake devices, subprocess)
+# ---------------------------------------------------------------------------
+
+SHARDED_LIFECYCLE_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys
+sys.path.insert(0, "src")
+import numpy as np, jax, jax.numpy as jnp
+from repro.compat import make_mesh
+from repro import api
+from repro.core.ref import OP_INSERT, OP_DELETE, OP_SEARCH
+from repro.core import lifecycle as LC
+
+mesh = make_mesh((4,), ("data",))
+base = api.UruvConfig(leaf_cap=16, max_leaves=16, max_versions=1 << 10,
+                      tracker_cap=8, max_chain=16)
+scfg = api.ShardedConfig(base=base, key_lo=0, key_hi=40_000)
+sdb = api.Uruv.sharded(scfg, mesh)
+ldb = api.Uruv(base)
+rng = np.random.default_rng(7)
+W = 32
+for rnd in range(26):
+    r = rng.random(W)
+    codes = np.where(r < 0.6, OP_INSERT,
+                     np.where(r < 0.8, OP_DELETE, OP_SEARCH)).astype(np.int32)
+    keys = rng.integers(0, 40_000, W).astype(np.int32)
+    vals = (keys % 1000 + 1).astype(np.int32)
+    plan = api.OpBatch(codes, keys, vals)
+    rs = sdb.apply(plan)
+    rl = ldb.apply(plan)
+    np.testing.assert_array_equal(np.asarray(rs.values),
+                                  np.asarray(rl.values))
+    np.testing.assert_array_equal(np.asarray(rs.timestamps),
+                                  np.asarray(rl.timestamps))
+    assert sdb.ts == ldb.ts, (sdb.ts, ldb.ts)
+# BOTH topologies outgrew the seed pools (per-shard AND local)
+assert sdb.capacity.max_leaves > base.max_leaves, sdb.capacity
+assert ldb.capacity.max_leaves > base.max_leaves, ldb.capacity
+assert sdb.stats["grows"] > 0 and ldb.stats["grows"] > 0
+# every shard shares one shape and the replicated clock agrees
+assert np.unique(np.asarray(sdb.store.ts)).size == 1
+# reads at a sweep of HISTORIC snapshots are bit-identical (version
+# timestamps resolve identically) even though the two topologies ran
+# different grow/maintain schedules
+probe = np.arange(0, 40_000, 61, dtype=np.int32)
+for snap in range(0, ldb.ts, max(1, ldb.ts // 7)):
+    np.testing.assert_array_equal(
+        np.asarray(sdb.lookup(probe, snap)),
+        np.asarray(ldb.lookup(probe, snap)))
+assert sorted(sdb.live_items()) == sorted(ldb.live_items())
+# explicit vmapped maintenance on the stacked store stays byte-stable
+with sdb.snapshot() as ts:
+    before = sdb.range(0, 40_000, ts)
+    sdb.maintain(64, phase=0)
+    sdb.maintain(64, phase=1)
+    after = sdb.range(0, 40_000, ts)
+assert before == after
+for sh in range(4):
+    shard = jax.tree.map(lambda x: x[sh], sdb.store)
+    from repro.core import store as S
+    S.check_invariants(shard)
+acc = LC.leaf_accounting(sdb.store)
+assert acc["n_alloc"] == acc["live"] + acc["dead"], acc
+print("SHARDED_LIFECYCLE_OK")
+"""
+
+
+def test_sharded_lifecycle_matches_local_on_4_devices():
+    r = subprocess.run(
+        [sys.executable, "-c", SHARDED_LIFECYCLE_SCRIPT],
+        capture_output=True, text=True, timeout=900,
+        cwd=str(Path(__file__).resolve().parents[1]),
+    )
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "SHARDED_LIFECYCLE_OK" in r.stdout

@@ -158,13 +158,20 @@ def test_slow_path_on_leaf_concentration():
 
 
 def test_capacity_error_when_full():
+    """The fixed-footprint contract: with the self-sizing lifecycle
+    disabled (policy=None at the combining layer), overflowing the pools
+    still raises CapacityError — now with diagnostics attached.  The
+    DEFAULT repro.api policy grows instead (tests/test_lifecycle.py)."""
     tiny = S.UruvConfig(leaf_cap=4, max_leaves=8, max_versions=64,
                         max_chain=8)
     st = S.create(tiny)
     keys = np.arange(0, 64, dtype=np.int32)
-    with pytest.raises(B.CapacityError):
+    with pytest.raises(B.CapacityError) as ei:
         for i in range(0, 64, 8):
-            st, _ = B.apply_updates(st, keys[i:i+8], keys[i:i+8])
+            codes = np.full(8, OP_INSERT, np.int32)
+            st, _ = B._apply_rounds(st, codes, keys[i:i+8], keys[i:i+8],
+                                    None, None, policy=None)
+    assert ei.value.oflow or ei.value.max_versions == 64
 
 
 def test_version_tracker_min_active():
