@@ -1,11 +1,15 @@
-.PHONY: check test test-range api examples docs bench-kernels bench-mixed \
-	bench-range bench-lifecycle
+.PHONY: check test test-slow test-range api examples docs bench-kernels \
+	bench-mixed bench-range bench-lifecycle bench-index
 
 check:
 	bash scripts/check.sh
 
 test:
 	PYTHONPATH=src python -m pytest -x -q
+
+# the slow-marked large-pool growth batteries (excluded from tier-1)
+test-slow:
+	PYTHONPATH=src python -m pytest -x -q -m slow
 
 test-range:
 	PYTHONPATH=src python -m pytest -x -q tests/test_range_property.py \
@@ -34,6 +38,11 @@ bench-range:
 # grow amortization; writes BENCH_lifecycle.json
 bench-lifecycle:
 	PYTHONPATH=src python -m benchmarks.run --quick --only lifecycle
+
+# multi-level fat-node index: delta maintenance vs flat full-rebuild,
+# locate at depth 1 vs multi-level; writes BENCH_index.json
+bench-index:
+	PYTHONPATH=src python -m benchmarks.run --quick --only index
 
 # extract + run every fenced ```python block in README.md / DESIGN.md
 # under URUV_BACKEND=pallas_interpret (docs can never rot)

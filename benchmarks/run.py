@@ -21,6 +21,10 @@ workloads; see each section).  Figures:
                  stop-the-world ``compact`` at matched reclamation, and
                  auto-grow amortization vs a pre-sized pool; writes
                  BENCH_lifecycle.json.
+  * index      — multi-level fat-node index: structural-batch latency
+                 under delta maintenance vs the flat full-rebuild
+                 discipline (4k -> 64k leaves), and locate throughput at
+                 depth 1 vs multi-level; writes BENCH_index.json.
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick]
 """
@@ -437,6 +441,160 @@ def lifecycle_bench(quick: bool = False,
     Path(out_path).write_text(json.dumps(report, indent=2) + "\n")
 
 
+def index_bench(quick: bool = False,
+                out_path: str = "BENCH_index.json") -> None:
+    """Multi-level fat-node index costs (DESIGN.md Sec 11); BENCH_index.json.
+
+    (a) *Structural maintenance, delta vs flat rebuild, vs leaf count*:
+    ONE jitted index-maintenance pass for a heavy structural batch (128
+    leaf splits) applied two ways — the bounded bottom-up separator
+    delta (`index.apply_split_delta`, O(touched·F·depth) — the shipped
+    path) vs the flat full-rebuild discipline (`reindex`: repack the
+    whole index, the pre-Sec-11 O(ML) behaviour).  The delta pass stays
+    ~flat as the leaf count grows 4k -> 64k while the rebuild scales
+    with ML — the per-ML speedup is the acceptance evidence.  The
+    end-to-end structural `apply` latency under both disciplines is
+    reported alongside for context (it folds in the leaf/version pool
+    writes common to both paths, so its ratio is structurally smaller).
+
+    (b) *Locate throughput, depth 1 vs multi-level*: the same resident
+    set indexed with one flat root fat node (fanout >= ML: descent is the
+    directory-era O(P·ML) compare-reduce) vs the default multi-level tree
+    (O(P·F·depth)).
+    """
+    import time as _time
+
+    import jax
+    import jax.numpy as jnp
+    from repro.core import index as _index   # isolated-pass microbench only
+
+    rng = np.random.default_rng(13)
+    report = {"structural": {}, "locate": {}}
+    mls = [1 << 12, 1 << 14] if quick else [1 << 12, 1 << 14, 1 << 16]
+    n_batches = 4
+    width = 1024
+    for ML in mls:
+        n_res = ML * 6                       # ~60-75% leaf occupancy
+        mv = max(1 << 16, 1 << int(np.ceil(np.log2(n_res * 1.5))))
+        cfg = UruvConfig(leaf_cap=16, max_leaves=ML, max_versions=mv,
+                         max_chain=16)
+        db0 = Uruv(cfg, policy=LifecyclePolicy(auto_grow=False,
+                                               auto_maintain=False))
+        resident = (np.arange(n_res, dtype=np.int64) * 2).astype(np.int32)
+        perm = rng.permutation(n_res)
+        for i in range(0, n_res, 4096):
+            b = resident[perm[i:i + 4096]]
+            db0.apply(OpBatch.inserts(b, b % 997 + 1))
+        n_leaves = int(np.asarray(db0.store.n_leaves))
+
+        # ---- isolated maintenance pass: delta vs flat rebuild ----------
+        K = 128                              # splits per structural batch
+        seps, leaves = _index.directory(db0.store.index, n_leaves)
+        pos = rng.choice(n_leaves - 1, K, replace=False) + 1
+        st0 = db0.store
+        n_alloc0 = int(np.asarray(st0.n_alloc))
+        d_valid = jnp.ones((K,), bool)
+        d_gkey = jnp.asarray(seps[pos])
+        d_old = jnp.asarray(leaves[pos])
+        d_left = jnp.arange(K, dtype=jnp.int32) * 2 + n_alloc0
+        d_right = d_left + 1
+        d_rkey = jnp.asarray(seps[pos] + 1)
+
+        @jax.jit
+        def delta_pass(idx):
+            new, oflow = _index.apply_split_delta(
+                idx, d_valid, d_gkey, d_old, d_left, d_right, d_rkey)
+            return new
+
+        def rebuild_pass(idx):
+            return _index.reindex(idx, st0.n_leaves, ML)    # jitted inside
+
+        jax.block_until_ready(delta_pass(st0.index))        # compile
+        jax.block_until_ready(rebuild_pass(st0.index))
+        dsec = W.timed(
+            lambda: jax.block_until_ready(delta_pass(st0.index)))
+        rsec = W.timed(
+            lambda: jax.block_until_ready(rebuild_pass(st0.index)))
+        emit(f"index_delta_pass_ml{ML}", dsec * 1e6, f"{K}splits")
+        emit(f"index_rebuild_pass_ml{ML}", rsec * 1e6, f"{n_leaves}leaves")
+        emit(f"index_pass_speedup_ml{ML}", rsec / dsec, f"{rsec/dsec:.2f}x")
+
+        fresh = rng.choice(n_res * 2, n_batches * width * 2,
+                           replace=False).astype(np.int64)
+        fresh = (fresh[fresh % 2 == 1][: n_batches * width]) \
+            .astype(np.int32)                # odd keys: all structural
+        batches = [fresh[i * width:(i + 1) * width]
+                   for i in range(n_batches)]
+
+        def run(rebuild_every_batch):
+            db = Uruv.from_store(db0.store,
+                                 policy=LifecyclePolicy(
+                                     auto_grow=False, auto_maintain=False))
+            for b in batches:                # warmup: compile both paths
+                db.apply(OpBatch.inserts(b[:width], b[:width] % 997 + 1))
+                if rebuild_every_batch:
+                    db.reindex()
+                break
+            db = Uruv.from_store(db0.store,
+                                 policy=LifecyclePolicy(
+                                     auto_grow=False, auto_maintain=False))
+            t0 = _time.perf_counter()
+            for b in batches:
+                db.apply(OpBatch.inserts(b, b % 997 + 1))
+                if rebuild_every_batch:
+                    db.reindex()
+            jax_block(db.store)
+            return (_time.perf_counter() - t0) / n_batches
+        delta_s = min(run(False) for _ in range(2))
+        rebuild_s = min(run(True) for _ in range(2))
+        emit(f"index_apply_delta_ml{ML}", delta_s * 1e6,
+             f"{n_leaves}leaves")
+        emit(f"index_apply_rebuild_ml{ML}", rebuild_s * 1e6,
+             f"{n_leaves}leaves")
+        report["structural"][f"ml{ML}"] = {
+            "n_leaves": n_leaves,
+            "delta_pass_us": round(dsec * 1e6, 1),
+            "flat_rebuild_pass_us": round(rsec * 1e6, 1),
+            "pass_speedup": round(rsec / dsec, 2),
+            "apply_delta_us": round(delta_s * 1e6, 1),
+            "apply_rebuild_us": round(rebuild_s * 1e6, 1),
+            "apply_speedup": round(rebuild_s / delta_s, 2),
+        }
+
+    # ---- (b) locate: depth 1 (flat compare-reduce) vs multi-level -------
+    ML = 1 << 10
+    n_res = ML * 6
+    resident = (np.arange(n_res, dtype=np.int64) * 2).astype(np.int32)
+    perm = rng.permutation(n_res)
+    probes = resident[rng.integers(0, n_res, 4096)].astype(np.int32)
+    for label, fanout, bwidth in (("depth1", ML, 512),
+                                  ("multilevel", 16, 4096)):
+        cfg = UruvConfig(leaf_cap=16, max_leaves=ML, max_versions=1 << 16,
+                         max_chain=16, index_fanout=fanout)
+        db = Uruv(cfg, policy=LifecyclePolicy(auto_grow=False,
+                                              auto_maintain=False))
+        for i in range(0, n_res, bwidth):
+            b = resident[perm[i:i + bwidth]]
+            db.apply(OpBatch.inserts(b, b % 997 + 1))
+        depth = db.store.index.cfg.depth
+        ts = db.ts
+        sec = W.timed(lambda: db.lookup(probes, ts))
+        emit(f"index_locate_{label}", sec * 1e6,
+             f"depth{depth};{len(probes)/sec/1e6:.2f}Mlookups/s")
+        report["locate"][label] = {
+            "depth": depth, "fanout": fanout,
+            "us_per_4096": round(sec * 1e6, 1),
+            "mlookups_per_s": round(len(probes) / sec / 1e6, 2),
+        }
+    Path(out_path).write_text(json.dumps(report, indent=2) + "\n")
+
+
+def jax_block(tree) -> None:
+    import jax
+
+    jax.block_until_ready(tree)
+
+
 def roofline_summary() -> None:
     """Dry-run roofline: dominant term for the hillclimbed cells (full
     table in EXPERIMENTS.md; reads experiments/dryrun artifacts)."""
@@ -466,7 +624,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="fig8|fig9|complexity|kernels|mixed|range|"
-                         "lifecycle|roofline")
+                         "lifecycle|index|roofline")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     sections = {
@@ -477,6 +635,7 @@ def main() -> None:
         "mixed": lambda: mixed(args.quick),
         "range": lambda: range_bench(args.quick),
         "lifecycle": lambda: lifecycle_bench(args.quick),
+        "index": lambda: index_bench(args.quick),
         "roofline": roofline_summary,
     }
     if args.only:

@@ -19,7 +19,22 @@ if grep -RnE "^[[:space:]]*(from repro\.core import [^#]*\b(store|batch|sharded|
 fi
 echo "ok"
 
-echo "== tier-1 tests =="
+echo "== index layering gate (descent internals live in core/index.py + core/backend.py) =="
+# The flat-directory era is over: no module may touch dir_keys/dir_leaf or
+# run a searchsorted-style descent outside the index/backend pair (plus
+# their Pallas kernel twins under kernels/uruv_search and the deliberately
+# flat comparison baseline core/baseline.py).  Ordinal/rank access goes
+# through repro.core.index helpers; sanctioned non-descent searchsorted
+# uses go through index.rank().
+if grep -RnE "dir_keys|dir_leaf|searchsorted" --include="*.py" \
+     src/repro benchmarks examples scripts \
+   | grep -vE "src/repro/core/(index|backend|baseline)\.py|src/repro/kernels/uruv_search/"; then
+  echo "ERROR: flat-directory/descent access outside core/index.py + core/backend.py"
+  exit 1
+fi
+echo "ok"
+
+echo "== tier-1 tests (slow-marked growth batteries excluded via pytest.ini) =="
 # The full suite (pytest -x -q) includes the range/snapshot battery
 # (tests/test_range_property.py), the kernel + sharded range parity tests
 # (tests/test_kernels.py, tests/test_sharding_dist.py) and the public-API
@@ -37,6 +52,12 @@ python -m benchmarks.run --quick --only range
 
 echo "== lifecycle: maintain vs compact + grow amortization (quick; writes BENCH_lifecycle.json) =="
 python -m benchmarks.run --quick --only lifecycle
+
+echo "== index: delta maintenance vs flat full-rebuild + locate depth sweep (quick; writes BENCH_index.json) =="
+python -m benchmarks.run --quick --only index
+
+echo "== BENCH_index.json =="
+cat BENCH_index.json
 
 echo "== BENCH_mixed.json =="
 cat BENCH_mixed.json

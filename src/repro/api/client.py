@@ -95,8 +95,20 @@ class Uruv:
     def stats(self):
         """Executor counters: ``device_passes`` / ``slow_path_rounds`` /
         ``compactions`` plus the lifecycle trio ``grows`` /
-        ``maintain_passes`` / ``leaves_reclaimed``."""
-        return self.executor.stats
+        ``maintain_passes`` / ``leaves_reclaimed``, merged with the
+        device-resident index counters ``index_delta_passes`` (structural
+        batches that ran the bounded separator-delta pass) and
+        ``index_propagations`` (node updates that propagated above the
+        bottom level — the observable O(touched·depth) bound of
+        DESIGN.md Sec 11; sharded stores sum their shards)."""
+        s = dict(self.executor.stats)
+        idx = getattr(self._store, "index", None)
+        if idx is not None:
+            s["index_delta_passes"] = int(
+                np.asarray(idx.stat_delta_passes).sum())
+            s["index_propagations"] = int(
+                np.asarray(idx.stat_propagations).sum())
+        return s
 
     @property
     def capacity(self):
@@ -265,6 +277,15 @@ class Uruv:
         reclamation; compact remains the version-pool GC."""
         self._store, n_live = self.executor.compact(self._store)
         return n_live
+
+    def reindex(self) -> None:
+        """Repack the internal fat-node index at pack_fill occupancy
+        (DESIGN.md Sec 11).  Runs automatically when a structural batch
+        rejects with ``OFLOW_INDEX`` (node-pool fragmentation after heavy
+        delete/merge churn); call it directly to defragment off-peak.
+        Every result — including reads at registered snapshots — is
+        byte-identical before and after."""
+        self._store = self.executor.reindex(self._store)
 
     # ------------------------------------------------------------- lifecycle
     def maintain(self, budget: Optional[int] = None, *,

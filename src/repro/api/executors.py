@@ -173,16 +173,7 @@ class LocalExecutor:
         # scanned keys dead at this snapshot) resumes at the first
         # unscanned leaf's separator — resuming at k1 would livelock
         i32 = jnp.int32
-        ML = store.cfg.max_leaves
-        lo_pos = jnp.maximum(
-            jnp.searchsorted(store.dir_keys, jnp.asarray(k1, i32),
-                             side="right").astype(i32) - 1, 0)
-        end_pos = lo_pos + max_scan_leaves
-        sep = jnp.where(
-            end_pos < store.n_leaves,
-            store.dir_keys[jnp.minimum(end_pos, ML - 1)],
-            jnp.asarray(k2, i32),
-        )
+        sep = _store.scan_resume_sep(store, k1, max_scan_leaves, k2)
         c = jnp.maximum(cnt - 1, 0)
         resume = jnp.where(
             cnt > 0, keys[c] + 1,
@@ -219,6 +210,12 @@ class LocalExecutor:
         self.stats["compactions"] += 1
         store, n_live = _store.compact(store)
         return store, int(n_live)
+
+    def reindex(self, store):
+        """Stop-the-world index repack (OFLOW_INDEX recovery / defrag);
+        results are unchanged by construction (DESIGN.md Sec 11)."""
+        self.stats["reindexes"] = self.stats.get("reindexes", 0) + 1
+        return _store.reindex(store)
 
 
 class ShardedExecutor:
@@ -352,12 +349,17 @@ class ShardedExecutor:
                 reason = getattr(e, "oflow_reason", 0)
                 grow_bits = reason & (_store.OFLOW_LEAVES
                                       | _store.OFLOW_VERSIONS)
-                if not (self.policy.auto_grow and grow_bits):
+                index_bit = reason & _store.OFLOW_INDEX
+                # reindex is reclamation, not growth: allowed under every
+                # policy; pool doubling stays behind auto_grow
+                if not (index_bit or (self.policy.auto_grow and grow_bits)):
                     raise CapacityError(str(e), store=store,
                                         oflow=reason) from e
                 self.stats["slow_path_rounds"] += 1
+                relief = index_bit | (
+                    grow_bits if self.policy.auto_grow else 0)
                 store = self._reshard(_lifecycle.relieve_pressure(
-                    store, grow_bits, len(codes), self.policy,
+                    store, relief, len(codes), self.policy,
                     stats=self.stats,
                 ))
         raise CapacityError(
@@ -447,3 +449,9 @@ class ShardedExecutor:
         self.stats["compactions"] += 1
         store, n_live = jax.vmap(_store.compact)(store)
         return store, int(np.asarray(n_live).sum())
+
+    def reindex(self, store):
+        """Repack every shard's index in one stacked pass (replicated
+        decision: shard shapes stay equal, results unchanged)."""
+        self.stats["reindexes"] = self.stats.get("reindexes", 0) + 1
+        return self._reshard(_store.reindex(store))

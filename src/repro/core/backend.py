@@ -1,13 +1,14 @@
 """Backend dispatch for the Uruv hot-path primitives (DESIGN.md Sec 7).
 
-The store's three inner loops — ``locate`` (directory descent + in-leaf
-rank), ``resolve`` (versioned chain read), and ``range_scan`` (fused
-leaf-window gather + versioned resolve for batched range queries) — have
-three interchangeable implementations with one contract:
+The store's three inner loops — ``locate`` (multi-level fat-node descent
++ in-leaf rank; DESIGN.md Sec 11), ``resolve`` (versioned chain read),
+and ``range_scan`` (fused leaf-window gather + versioned resolve for
+batched range queries) — have three interchangeable implementations with
+one contract:
 
-  * ``xla``              — pure-jnp formulation (``searchsorted`` descent,
-    ``while_loop`` chain walk).  Lowers on every backend; the portable
-    default off-TPU.
+  * ``xla``              — pure-jnp formulation (gather/compare-reduce
+    descent via ``repro.core.index``, ``while_loop`` chain walk).  Lowers
+    on every backend; the portable default off-TPU.
   * ``pallas``           — the compiled Pallas TPU kernels
     (``repro.kernels.uruv_search`` + ``repro.kernels.versioned_read`` +
     ``repro.kernels.uruv_range``).  Deployment configuration on real TPUs.
@@ -64,34 +65,48 @@ def get_backend() -> str:
 
 
 # ---------------------------------------------------------------------------
-# locate: directory rank -> leaf gather -> in-leaf slot (+ vhead gather)
+# descend / locate: multi-level fat-node descent -> leaf gather -> in-leaf
+# slot (+ vhead gather).  DESIGN.md Sec 11.
 # ---------------------------------------------------------------------------
 
-def locate(dir_keys, dir_leaf, leaf_keys, leaf_vhead, queries, *, backend: str):
-    """Full traversal: returns (dir_pos, leaf_id, slot, exists, vhead).
+def descend(index, queries, *, backend: str):
+    """Root->leaf blocked F-way descent over ``repro.core.index``.
 
-    ``vhead`` is -1 where the key is absent.  Trace-time dispatch: call
-    only from functions where ``backend`` is static.
+    Returns (bottom_node, bottom_slot, leaf_id) of the last separator
+    <= q.  Trace-time dispatch: ``backend`` must be static.
+    """
+    if backend == XLA:
+        from repro.core import index as _index
+
+        return _index.descend(index, queries)
+    from repro.kernels.uruv_search.uruv_search import index_descend
+
+    return index_descend(
+        index.node_keys, index.node_child, queries,
+        interpret=(backend == PALLAS_INTERPRET),
+    )
+
+
+def locate(index, leaf_keys, leaf_vhead, queries, *, backend: str):
+    """Full traversal: returns (bnode, bslot, leaf_id, slot, exists,
+    vhead).  ``(bnode, bslot)`` is the bottom index entry covering the
+    query (the structural delta's grouping key); ``vhead`` is -1 where
+    the key is absent.  Trace-time dispatch: ``backend`` must be static.
     """
     L = leaf_keys.shape[1]
+    bnode, bslot, leaf_id = descend(index, queries, backend=backend)
+    rows = leaf_keys[leaf_id]                              # [P, L]
     if backend == XLA:
-        pos = jnp.searchsorted(dir_keys, queries, side="right").astype(jnp.int32) - 1
-        pos = jnp.maximum(pos, 0)
-        leaf_id = dir_leaf[pos]
-        rows = leaf_keys[leaf_id]                          # [P, L]
         slot = jnp.sum(rows < queries[:, None], axis=1).astype(jnp.int32)
         hit = jnp.take_along_axis(
             rows, jnp.minimum(slot, L - 1)[:, None], axis=1
         )[:, 0]
         exists = (slot < L) & (hit == queries)
     else:
-        from repro.kernels.uruv_search.uruv_search import leaf_slots, search_positions
+        from repro.kernels.uruv_search.uruv_search import leaf_slots
 
-        interpret = backend == PALLAS_INTERPRET
-        pos = search_positions(dir_keys, queries, interpret=interpret)
-        leaf_id = dir_leaf[pos]
-        rows = leaf_keys[leaf_id]
-        slot, exists = leaf_slots(rows, queries, interpret=interpret)
+        slot, exists = leaf_slots(rows, queries,
+                                  interpret=(backend == PALLAS_INTERPRET))
     vhead = jnp.where(
         exists,
         jnp.take_along_axis(
@@ -99,7 +114,7 @@ def locate(dir_keys, dir_leaf, leaf_keys, leaf_vhead, queries, *, backend: str):
         )[:, 0],
         -1,
     )
-    return pos, leaf_id, slot, exists, vhead
+    return bnode, bslot, leaf_id, slot, exists, vhead
 
 
 # ---------------------------------------------------------------------------

@@ -130,6 +130,16 @@ def _apply_rounds(
         return new_store, np.asarray(res)
     _bump(stats, "slow_path_rounds")
     reason = int(new_store.oflow) & ~int(store.oflow)
+    if reason & S.OFLOW_INDEX:
+        # fat-node pools fragmented (or root overflow): reindex repacks
+        # them at pack_fill — no capacity growth, results unchanged —
+        # then retry at the SAME timestamps.  Available under every
+        # policy (it is reclamation, not growth).
+        _bump(stats, "reindexes")
+        return _apply_rounds(S.reindex(_clear_oflow(store)), codes, keys,
+                             values, op_ts, next_ts, light_path=light_path,
+                             backend=backend, stats=stats, policy=policy,
+                             _depth=_depth + 1)
     if reason & (S.OFLOW_VERSIONS | S.OFLOW_LEAVES):
         if policy is not None and policy.auto_grow:
             relieved = LC.relieve_pressure(

@@ -1,0 +1,858 @@
+"""repro.core.index — the multi-level fat-node internal index (DESIGN.md Sec 11).
+
+The paper's Uruv keeps a balanced search index *installed on the linked
+leaf list*, maintained by proactive, LOCAL split/merge.  Earlier PRs
+flattened that index into one sorted separator array (``dir_keys`` /
+``dir_leaf``) that was fully rebuilt — an O(ML) scatter plus a full
+``leaf_next`` rewrite — on every structural batch.  This module restores
+the paper's shape, batch-style:
+
+  * **Levels.**  ``node_keys[l][C_l, F]`` / ``node_child[l][C_l, F]`` /
+    ``node_cnt[l][C_l]`` — level 0 is the bottom (fat nodes over the leaf
+    separators; children are leaf ids), level ``depth-1`` is the root
+    (always node id 0).  Entries are sorted in-node and KEY_MAX padded;
+    an entry's key is a *lower bound* for its subtree (the leftmost spine
+    carries KEY_MIN).  A node id never changes once allocated — order is
+    parent-defined, like the paper's pointer structure.
+  * **Deltas, not rebuilds.**  Structural batches emit a bounded
+    separator delta (one insert per leaf split, one delete per leaf
+    merge).  It is applied level-by-level bottom-up: a touched node is
+    rewritten in a [2F] workspace; only on *overflow* does it split and
+    push one entry to its parent (the paper's proactive balancing,
+    batched).  Work is O(touched · F · depth), independent of ML.
+  * **Ordinal spine.**  Range scans need rank/select over the global
+    leaf order.  ``ord_node`` / ``node_pos`` / ``ord_start`` keep the
+    bottom nodes in key order with prefix separator counts — O(C0) =
+    O(ML / (F/2)) to refresh, and only when separators or bottom-node
+    topology change (a version-only batch touches nothing).
+  * **Reverse map.**  ``leaf_ent[leaf_id] = bottom_node * F + slot``
+    lets lifecycle relocation retarget a moved leaf with O(1) writes
+    instead of the old O(ML) directory remap, and gives maintenance the
+    (node, slot) of a merged-away leaf's separator directly.
+
+Capacity discipline: node pools are power-of-two sized from (ML, F)
+assuming >= F/2 fill (what splits guarantee).  A batch that cannot place
+its delta — pool exhausted by deletion fragmentation, or root overflow —
+rejects atomically with ``OFLOW_INDEX`` and the combining layer calls
+:func:`reindex`: a stop-the-world repack at 3F/4 fill, the rare analogue
+of ``compact()``.  ``lifecycle.grow`` tail-extends every pool (and adds
+root levels) under the same pow2 bucketing as the leaf pool.
+
+Layering: this module and ``repro.core.backend`` are the ONLY places
+allowed to touch index internals or run searchsorted-style descents
+(enforced by a grep gate in scripts/check.sh).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.ref import KEY_MAX
+
+KEY_MIN = -(2**31)      # left sentinel: separator of the leftmost leaf
+
+_I32MAX = 2**31 - 1     # ord_start padding (keeps searchsorted monotone)
+
+
+def pow2ceil(n: int) -> int:
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
+# ---------------------------------------------------------------------------
+# Static shape model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class IndexConfig:
+    """Static index geometry (compile-time constant, derived from the
+    store's (max_leaves, index_fanout) — see :func:`index_config`)."""
+
+    fanout: int                 # F — entries per fat node
+    depth: int                  # levels; level 0 bottom, depth-1 root
+    caps: Tuple[int, ...]       # per-level node-pool capacity (pow2)
+
+    @property
+    def pack_fill(self) -> int:
+        """Occupancy target for freshly built nodes (3F/4 — slack for
+        in-place inserts before the first split)."""
+        return max(1, (3 * self.fanout) // 4)
+
+
+@functools.lru_cache(maxsize=None)
+def index_config(max_leaves: int, fanout: int) -> IndexConfig:
+    """Depth/capacity model: level l holds the level-(l-1) node stream
+    packed at >= F/2 fill (the split guarantee), so caps shrink by F/2
+    per level until one root node covers everything."""
+    if fanout < 4:
+        raise ValueError(f"index_fanout must be >= 4, got {fanout}")
+    half = fanout // 2
+    caps = []
+    n_entries = max(1, int(max_leaves))
+    while True:
+        n_nodes = -(-n_entries // half)          # ceil under F/2 fill
+        caps.append(pow2ceil(n_nodes))
+        if n_entries <= fanout:                  # fits one (root) node
+            caps[-1] = max(caps[-1], 1)
+            break
+        n_entries = n_nodes
+    # the top level must be a single live node: its cap only needs >= 1,
+    # but keep the computed pow2 (slack is harmless and keeps growth
+    # monotone in ML)
+    return IndexConfig(fanout=fanout, depth=len(caps), caps=tuple(caps))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class UruvIndex:
+    # --- levels (l = 0 bottom .. depth-1 root; root is node 0) ---
+    node_keys: Tuple[jax.Array, ...]    # int32 [C_l, F] sorted, KEY_MAX pad
+    node_child: Tuple[jax.Array, ...]   # int32 [C_l, F]; l=0: leaf ids
+    node_cnt: Tuple[jax.Array, ...]     # int32 [C_l]; 0 == free slot
+    # --- ordinal spine over the bottom level ---
+    ord_node: jax.Array                 # int32 [C0] ordinal -> node id; -1 pad
+    node_pos: jax.Array                 # int32 [C0] node id -> ordinal; -1 dead
+    ord_start: jax.Array                # int32 [C0] first leaf ordinal; I32MAX pad
+    n_nodes0: jax.Array                 # int32 [] live bottom nodes
+    # --- reverse map ---
+    leaf_ent: jax.Array                 # int32 [ML] leaf id -> node*F+slot; -1
+    # --- observability (cumulative device counters; see api.Uruv.stats) ---
+    stat_delta_passes: jax.Array        # int32 [] structural delta passes
+    stat_propagations: jax.Array        # int32 [] node updates above level 0
+    cfg: IndexConfig = dataclasses.field(metadata=dict(static=True))
+
+
+def _cummax(x: jax.Array) -> jax.Array:
+    return lax.associative_scan(jnp.maximum, x)
+
+
+# ---------------------------------------------------------------------------
+# Build (packed) — create(), compact(), reindex() and checkpoint restore
+# ---------------------------------------------------------------------------
+
+def build(cfg: IndexConfig, max_leaves: int, sep_keys: jax.Array,
+          sep_leaf: jax.Array, n_sep: jax.Array) -> UruvIndex:
+    """Pack ``n_sep`` separators (key order; ``sep_keys[0]`` is the left
+    sentinel slot and is forced to KEY_MIN) into fresh fat nodes at
+    pack_fill occupancy.  O(ML) — used only at create / compact /
+    reindex time; steady-state batches go through the delta path."""
+    F, D = cfg.fanout, cfg.depth
+    PF = cfg.pack_fill
+    i32 = jnp.int32
+    ML = max_leaves
+    n_sep = jnp.asarray(n_sep, i32)
+    sep_keys = jnp.asarray(sep_keys, i32).at[0].set(KEY_MIN)
+    sep_leaf = jnp.asarray(sep_leaf, i32)
+
+    keys_t, child_t, cnt_t = [], [], []
+    # ---- level 0: separators -> nodes of PF entries.  A depth-1 index
+    # IS its root: descent only ever visits node 0, so everything must
+    # pack into it (n_sep <= ML <= F there by the depth model). ----
+    PF0 = PF if D > 1 else F
+    C0 = cfg.caps[0]
+    i = jnp.arange(ML, dtype=i32)
+    valid = i < n_sep
+    node = jnp.where(valid, i // PF0, C0)
+    slot = i % PF0
+    k0 = jnp.full((C0, F), KEY_MAX, i32).at[node, slot].set(
+        jnp.where(valid, sep_keys, KEY_MAX), mode="drop")
+    c0 = jnp.full((C0, F), -1, i32).at[node, slot].set(
+        jnp.where(valid, sep_leaf, -1), mode="drop")
+    n0 = jnp.maximum(-(-n_sep // PF0), 1)
+    cnt0 = jnp.clip(n_sep - jnp.arange(C0, dtype=i32) * PF0, 0, PF0)
+    cnt0 = jnp.where(jnp.arange(C0) < n0, jnp.maximum(cnt0, 0), 0)
+    # an empty store still has its sentinel separator: node 0 keeps >= 1
+    cnt0 = cnt0.at[0].max(1)
+    keys_t.append(k0)
+    child_t.append(c0)
+    cnt_t.append(cnt0)
+
+    # ---- upper levels: previous level's node stream, packed ----
+    n_prev = n0
+    for l in range(1, D):
+        Cp = cfg.caps[l - 1]
+        Cl = cfg.caps[l]
+        j = jnp.arange(Cp, dtype=i32)
+        v = j < n_prev
+        ekey = jnp.where(v, keys_t[l - 1][:, 0], KEY_MAX)
+        pf = PF if l < D - 1 else F          # root swallows everything left
+        nd = jnp.where(v, j // pf, Cl)
+        sl = j % pf
+        kl = jnp.full((Cl, F), KEY_MAX, i32).at[nd, sl].set(
+            jnp.where(v, ekey, KEY_MAX), mode="drop")
+        cl = jnp.full((Cl, F), -1, i32).at[nd, sl].set(
+            jnp.where(v, j, -1), mode="drop")
+        nl = jnp.maximum(-(-n_prev // pf), 1)
+        cntl = jnp.clip(n_prev - jnp.arange(Cl, dtype=i32) * pf, 0, pf)
+        cntl = jnp.where(jnp.arange(Cl) < nl, cntl, 0)
+        cntl = cntl.at[0].max(1)
+        keys_t.append(kl)
+        child_t.append(cl)
+        cnt_t.append(cntl)
+        n_prev = nl
+
+    # ---- spine ----
+    o = jnp.arange(C0, dtype=i32)
+    live = o < n0
+    ord_node = jnp.where(live, o, -1)
+    node_pos = jnp.where(live, o, -1)
+    ord_start = jnp.where(live, o * PF0, _I32MAX)
+    # ---- reverse map ----
+    leaf_ent = jnp.full((ML,), -1, i32).at[
+        jnp.where(valid, sep_leaf, ML)
+    ].set(jnp.where(valid, node * F + slot, -1), mode="drop")
+
+    return UruvIndex(
+        node_keys=tuple(keys_t), node_child=tuple(child_t),
+        node_cnt=tuple(cnt_t),
+        ord_node=ord_node, node_pos=node_pos, ord_start=ord_start,
+        n_nodes0=n0.astype(i32), leaf_ent=leaf_ent,
+        stat_delta_passes=jnp.array(0, i32),
+        stat_propagations=jnp.array(0, i32),
+        cfg=cfg,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Descent (XLA formulation; the Pallas twin lives in kernels/uruv_search)
+# ---------------------------------------------------------------------------
+
+def descend(idx: UruvIndex, queries: jax.Array):
+    """Root->leaf blocked F-way descent.  Returns (bnode, bslot, leaf):
+    the bottom (node, slot) of the last separator <= q, and its leaf."""
+    bnode, bslot, leaf, _, _ = _descend_full(idx, queries)
+    return bnode, bslot, leaf
+
+
+def descend_path(idx: UruvIndex, queries: jax.Array):
+    """Full descent path: (nodes[D, P], slots[D, P]) with level 0 first
+    (nodes[0] == bottom node).  XLA-only — the structural delta uses it
+    to target parents when a node split propagates."""
+    _, _, _, nodes, slots = _descend_full(idx, queries)
+    return nodes, slots
+
+
+def _descend_full(idx: UruvIndex, queries: jax.Array):
+    F, D = idx.cfg.fanout, idx.cfg.depth
+    i32 = jnp.int32
+    q = jnp.asarray(queries, i32)
+    cur = jnp.zeros(q.shape, i32)                # root is node 0
+    nodes, slots = [None] * D, [None] * D
+    slot = jnp.zeros(q.shape, i32)
+    for l in range(D - 1, -1, -1):
+        rows = idx.node_keys[l][cur]             # [P, F]
+        # live entries only: KEY_MAX is padding, never a separator (keeps
+        # q == KEY_MAX sentinels — retired range queries — well-defined)
+        slot = jnp.maximum(
+            jnp.sum(((rows <= q[..., None]) & (rows < KEY_MAX)).astype(i32),
+                    axis=-1) - 1, 0)
+        nodes[l], slots[l] = cur, slot
+        nxt = jnp.take_along_axis(
+            idx.node_child[l][cur], slot[..., None], axis=-1)[..., 0]
+        if l > 0:
+            cur = nxt
+    return nodes[0], slots[0], nxt, jnp.stack(nodes), jnp.stack(slots)
+
+
+# ---------------------------------------------------------------------------
+# Rank / select over the ordinal spine
+# ---------------------------------------------------------------------------
+
+def leaf_ordinal(idx: UruvIndex, bnode: jax.Array,
+                 bslot: jax.Array) -> jax.Array:
+    """Global leaf ordinal (the old flat-directory position) of a bottom
+    (node, slot) entry."""
+    pos = idx.node_pos[jnp.maximum(bnode, 0)]
+    return idx.ord_start[jnp.maximum(pos, 0)] + bslot
+
+
+def rank_right(idx: UruvIndex, queries: jax.Array) -> jax.Array:
+    """# separators <= q — the old searchsorted(dir_keys, q, 'right')."""
+    bnode, bslot, _ = descend(idx, queries)
+    return leaf_ordinal(idx, bnode, bslot) + 1
+
+
+def ord_locate(idx: UruvIndex, p: jax.Array):
+    """Leaf ordinal -> (bottom node, slot).  Caller masks p outside
+    [0, n_leaves) — out-of-range ordinals return clamped garbage."""
+    C0 = idx.ord_start.shape[-1]
+    no = jnp.clip(
+        jnp.searchsorted(idx.ord_start, p, side="right").astype(jnp.int32) - 1,
+        0, C0 - 1,
+    )
+    node = idx.ord_node[no]
+    slot = p - idx.ord_start[no]
+    return jnp.maximum(node, 0), jnp.clip(slot, 0, idx.cfg.fanout - 1)
+
+
+def leaf_at(idx: UruvIndex, p: jax.Array) -> jax.Array:
+    """Leaf id at ordinal p (the old dir_leaf[p]); caller masks range."""
+    node, slot = ord_locate(idx, p)
+    return idx.node_child[0][node, slot]
+
+
+def sep_at(idx: UruvIndex, p: jax.Array) -> jax.Array:
+    """Separator key at ordinal p (the old dir_keys[p]); caller masks."""
+    node, slot = ord_locate(idx, p)
+    return idx.node_keys[0][node, slot]
+
+
+def rank(a: jax.Array, v: jax.Array, *, side: str = "right") -> jax.Array:
+    """Generic sorted-array rank (int32).  The ONE sanctioned searchsorted
+    for non-index arrays (worklist offsets, hit cumsums) — keeps the
+    scripts/check.sh descent gate greppable."""
+    return jnp.searchsorted(a, v, side=side).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Delta application — the tentpole.  Bounded bottom-up separator inserts
+# (leaf splits) with overflow-triggered node splits, and separator deletes
+# (leaf merges) that never underflow a node to zero.
+# ---------------------------------------------------------------------------
+
+def _insert_level(keys_l, child_l, cnt_l, it_node, it_key, it_child,
+                  it_gidx, it_valid, *, fanout: int, is_root: bool):
+    """Insert up to N=len(it_node) (key, child) entries into level-l nodes.
+
+    Returns (keys_l, child_l, cnt_l, seg ...) where ``seg`` describes the
+    per-touched-node outcome: (seg_node, seg_gidx, seg_real, ovf, rid,
+    lc, new_cnt, left_keys, left_child, right_keys, right_child) plus the
+    emitted parent items (node splits) and an overflow flag.  Invariant
+    (guaranteed by construction, guarded anyway): <= F inserts per node.
+    """
+    F = fanout
+    Cl = keys_l.shape[0]
+    N = it_node.shape[0]
+    W = 2 * F
+    i32 = jnp.int32
+    posN = jnp.arange(N, dtype=i32)
+
+    # ---- group items by target node (sort by (node, key)) ----
+    nodev = jnp.where(it_valid, it_node, Cl)
+    snode, skey, schild, sgidx = lax.sort(
+        (nodev, it_key, it_child, it_gidx), num_keys=2)
+    svalid = snode < Cl
+    first = svalid & jnp.concatenate(
+        [jnp.ones((1,), bool), snode[1:] != snode[:-1]])
+    segid = jnp.cumsum(first.astype(i32)) - 1
+    segstart = _cummax(jnp.where(first, posN, -1))
+    off = posN - jnp.maximum(segstart, 0)
+    n_seg = jnp.sum(first.astype(i32))
+    seg_real = posN < n_seg
+    srow = jnp.where(first, segid, N - 1)
+    seg_node = jnp.zeros((N,), i32).at[srow].set(
+        jnp.where(first, snode, 0), mode="drop")
+    seg_node = jnp.where(seg_real, seg_node, 0)
+    seg_gidx = jnp.zeros((N,), i32).at[srow].set(
+        jnp.where(first, sgidx, 0), mode="drop")
+    seg_ins = jnp.zeros((N,), i32).at[
+        jnp.where(svalid, segid, N - 1)
+    ].add(jnp.where(svalid, 1, 0), mode="drop")
+
+    # ---- per-node workspace merge ----
+    # Measured on CPU XLA, the row-wise 2-operand lax.sort is the fastest
+    # way to merge here (~0.7 ms for [128, 32]): rank-scatter and one-hot
+    # matmul formulations both lose to it because XLA CPU scatters are
+    # scalarized (~0.2 us per scattered element).
+    wk_keys = jnp.full((N, W), KEY_MAX, i32)
+    wk_child = jnp.full((N, W), -1, i32)
+    wk_keys = wk_keys.at[:, :F].set(
+        jnp.where(seg_real[:, None], keys_l[seg_node], KEY_MAX))
+    wk_child = wk_child.at[:, :F].set(
+        jnp.where(seg_real[:, None], child_l[seg_node], -1))
+    row = jnp.where(svalid, segid, N - 1)
+    col = jnp.where(svalid, F + jnp.minimum(off, F - 1), W)
+    wk_keys = wk_keys.at[row, col].set(
+        jnp.where(svalid, skey, KEY_MAX), mode="drop")
+    wk_child = wk_child.at[row, col].set(
+        jnp.where(svalid, schild, -1), mode="drop")
+    wk_keys, wk_child = lax.sort((wk_keys, wk_child), dimension=1, num_keys=1)
+
+    old_cnt = jnp.where(seg_real, cnt_l[seg_node], 0)
+    new_cnt = old_cnt + seg_ins
+    oflow = jnp.any(seg_ins > F)             # structural bound violated
+
+    # ---- node splits on overflow ----
+    ovf = seg_real & (new_cnt > F)
+    lc = jnp.where(ovf, (new_cnt + 1) // 2, new_cnt)
+    free = cnt_l == 0
+    free_cum = jnp.cumsum(free.astype(i32))      # [C_l] (vectorized)
+    n_free = free_cum[Cl - 1]
+    ovfrank = jnp.cumsum(ovf.astype(i32)) - 1
+    n_ovf = jnp.sum(ovf.astype(i32))
+    if is_root:
+        oflow |= n_ovf > 0                   # the root may never split
+    oflow |= n_ovf > n_free
+    # k-th free slot by binary search over the free-count prefix — an
+    # O(N log C) gather instead of an O(C) scatter (CPU XLA scatters are
+    # scalarized; this keeps the delta pass independent of the pool size)
+    rid_k = jnp.searchsorted(
+        free_cum, jnp.minimum(ovfrank, N - 1) + 1, side="left").astype(i32)
+    rid = jnp.where(ovf, jnp.minimum(rid_k, Cl - 1), Cl)
+
+    colW = jnp.arange(W, dtype=i32)[None, :]
+    lmask = colW < lc[:, None]
+    lk = jnp.where(lmask, wk_keys, KEY_MAX)[:, :F]
+    lch = jnp.where(lmask, wk_child, -1)[:, :F]
+    shift = jnp.minimum(colW + lc[:, None], W - 1)
+    rk_full = jnp.take_along_axis(wk_keys, shift, axis=1)
+    rch_full = jnp.take_along_axis(wk_child, shift, axis=1)
+    rmask = colW < (new_cnt - lc)[:, None]
+    rk = jnp.where(rmask, rk_full, KEY_MAX)[:, :F]
+    rch = jnp.where(rmask, rch_full, -1)[:, :F]
+
+    wnode = jnp.where(seg_real, seg_node, Cl)
+    keys_l = keys_l.at[wnode].set(lk, mode="drop")
+    child_l = child_l.at[wnode].set(lch, mode="drop")
+    cnt_l = cnt_l.at[wnode].set(lc, mode="drop")
+    wrid = jnp.where(ovf & ~oflow, rid, Cl)   # don't scribble when rejecting
+    keys_l = keys_l.at[wrid].set(rk, mode="drop")
+    child_l = child_l.at[wrid].set(rch, mode="drop")
+    cnt_l = cnt_l.at[wrid].set(new_cnt - lc, mode="drop")
+
+    # ---- emitted parent items: (right half's first key, right node id) ----
+    em_key = rk[:, 0]
+    em_child = rid
+    em_valid = ovf & ~oflow
+    seg = dict(node=seg_node, gidx=seg_gidx, real=seg_real, ovf=ovf,
+               rid=rid, lc=lc, new_cnt=new_cnt,
+               lk=lk, lch=lch, rk=rk, rch=rch)
+    return (keys_l, child_l, cnt_l, seg,
+            em_key, em_child, em_valid, oflow)
+
+
+def _maybe_insert_level(keys_l, child_l, cnt_l, it_node, it_key, it_child,
+                        it_gidx, it_valid, *, fanout: int, is_root: bool):
+    """:func:`_insert_level` under a lax.cond: a level with no incoming
+    items (the common case above level 1 — splits propagate only on
+    overflow) costs one predicate instead of a full workspace pass, so
+    the delta stays O(*touched* levels) at runtime, not O(depth)."""
+    F = fanout
+    Cl = keys_l.shape[0]
+    N = it_node.shape[0]
+    i32 = jnp.int32
+
+    def live(args):
+        return _insert_level(*args, fanout=fanout, is_root=is_root)
+
+    def skip(args):
+        keys_l, child_l, cnt_l, *_ = args
+        z = jnp.zeros((N,), i32)
+        zb = jnp.zeros((N,), bool)
+        seg = dict(node=z, gidx=z, real=zb, ovf=zb,
+                   rid=jnp.full((N,), Cl, i32), lc=z, new_cnt=z,
+                   lk=jnp.full((N, F), KEY_MAX, i32),
+                   lch=jnp.full((N, F), -1, i32),
+                   rk=jnp.full((N, F), KEY_MAX, i32),
+                   rch=jnp.full((N, F), -1, i32))
+        return (keys_l, child_l, cnt_l, seg,
+                jnp.full((N,), KEY_MAX, i32), jnp.full((N,), Cl, i32), zb,
+                jnp.zeros((), bool))
+
+    return lax.cond(
+        jnp.any(it_valid), live, skip,
+        (keys_l, child_l, cnt_l, it_node, it_key, it_child, it_gidx,
+         it_valid))
+
+
+def apply_split_delta(idx: UruvIndex, valid: jax.Array, gkey: jax.Array,
+                      old_leaf: jax.Array, left_id: jax.Array,
+                      right_id: jax.Array, rkey: jax.Array):
+    """Apply one structural batch's leaf-split delta.
+
+    Per split group g (masked by ``valid``): the leaf ``old_leaf[g]``
+    (whose range contains ``gkey[g]``) froze and split into (left_id,
+    right_id) at separator ``rkey[g]`` — its bottom entry is retargeted
+    to ``left_id`` and (rkey, right_id) is inserted, propagating node
+    splits upward only on overflow.  Returns ``(index, oflow)``; on
+    oflow the caller rejects the whole batch (the returned index must be
+    discarded).
+    """
+    cfg = idx.cfg
+    F, D = cfg.fanout, cfg.depth
+    i32 = jnp.int32
+    P = gkey.shape[0]
+    ML = idx.leaf_ent.shape[0]
+    path_nodes, path_slots = descend_path(idx, gkey)     # [D, P]
+    bnode = jnp.where(valid, path_nodes[0], cfg.caps[0])
+    bslot = jnp.where(valid, path_slots[0], F)
+
+    keys_t = list(idx.node_keys)
+    child_t = list(idx.node_child)
+    cnt_t = list(idx.node_cnt)
+
+    # level 0 entry retarget: old (frozen) leaf -> left half
+    child_t[0] = child_t[0].at[bnode, bslot].set(
+        jnp.where(valid, left_id, -1), mode="drop")
+    leaf_ent = idx.leaf_ent.at[jnp.where(valid, old_leaf, ML)].set(
+        -1, mode="drop")
+
+    it_node = jnp.where(valid, bnode, cfg.caps[0])
+    it_key = rkey
+    it_child = right_id
+    it_gidx = jnp.arange(P, dtype=i32)
+    it_valid = valid
+    oflow = jnp.zeros((), bool)
+    seg0 = None
+    props = jnp.zeros((), i32)
+    for l in range(D):
+        (keys_t[l], child_t[l], cnt_t[l], seg,
+         em_key, em_child, em_valid, ofl) = _maybe_insert_level(
+            keys_t[l], child_t[l], cnt_t[l],
+            it_node, it_key, it_child, it_gidx, it_valid,
+            fanout=F, is_root=(l == D - 1))
+        oflow |= ofl
+        if l == 0:
+            seg0 = seg
+        else:
+            props += jnp.sum(it_valid.astype(i32))
+        if l + 1 < D:
+            # parent of a split level-l node = the descent path of any
+            # item that targeted it (paths to a node are unique)
+            parent = path_nodes[l + 1][seg["gidx"]]
+            it_node = jnp.where(em_valid, parent, cfg.caps[l + 1])
+            it_key, it_child = em_key, em_child
+            it_gidx = seg["gidx"]
+            it_valid = em_valid
+
+    # ---- reverse map: rewrite leaf_ent for every touched bottom node ----
+    ML = leaf_ent.shape[0]
+    sl = jnp.arange(F, dtype=i32)[None, :]
+    lmask = seg0["real"][:, None] & (sl < seg0["lc"][:, None])
+    leaf_ent = leaf_ent.at[jnp.where(lmask, seg0["lch"], ML)].set(
+        jnp.where(lmask, seg0["node"][:, None] * F + sl, -1), mode="drop")
+    rmask = (seg0["ovf"] & ~oflow)[:, None] & (
+        sl < (seg0["new_cnt"] - seg0["lc"])[:, None])
+    leaf_ent = leaf_ent.at[jnp.where(rmask, seg0["rch"], ML)].set(
+        jnp.where(rmask, seg0["rid"][:, None] * F + sl, -1), mode="drop")
+
+    # ---- spine refresh: insert split-off nodes after their left halves.
+    # Gather-formulated (searchsorted over the K sorted insertion points +
+    # one K-index scatter): CPU XLA scatters are scalarized, so an O(C0)
+    # index scatter here would make the delta pass scale with the pool —
+    # this keeps it O(C0) *vectorized* work + O(K) scattered elements. ----
+    C0 = cfg.caps[0]
+    o = jnp.arange(C0, dtype=i32)
+    n_split0 = jnp.sum(seg0["ovf"].astype(i32))
+    n0 = idx.n_nodes0 + n_split0
+    # old ordinals of the split (left) nodes, sorted, with their new
+    # right-half ids riding along
+    sp = jnp.where(seg0["ovf"], idx.node_pos[seg0["node"]], _I32MAX)
+    sps, srids = lax.sort((sp, seg0["rid"]), num_keys=1)
+    ins_newpos = jnp.where(
+        sps < _I32MAX, sps + jnp.arange(P, dtype=i32) + 1, _I32MAX)
+    kk = jnp.searchsorted(ins_newpos, o, side="right").astype(i32)
+    is_ins = (kk > 0) & (
+        ins_newpos[jnp.maximum(kk - 1, 0)] == o)
+    src = jnp.clip(o - kk, 0, C0 - 1)
+    ord_node = jnp.where(
+        is_ins,
+        srids[jnp.maximum(kk - 1, 0)],
+        jnp.where(o - kk < idx.n_nodes0, idx.ord_node[src], -1),
+    )
+    ord_node = jnp.where(o < n0, ord_node, -1)
+    # inverse: every old node shifts by the insertions before it; the K
+    # new nodes land right after their left halves (one small scatter)
+    p_n = idx.node_pos
+    shift = jnp.searchsorted(sps, jnp.maximum(p_n, 0),
+                             side="left").astype(i32)
+    node_pos = jnp.where(p_n >= 0, p_n + shift, -1)
+    newpos_k = jnp.maximum(sp, 0) + jnp.searchsorted(
+        sps, jnp.maximum(sp, 0), side="left").astype(i32) + 1
+    node_pos = node_pos.at[
+        jnp.where(seg0["ovf"], seg0["rid"], C0)
+    ].set(jnp.where(seg0["ovf"], newpos_k, -1), mode="drop")
+    ord_cnt = jnp.where(o < n0, cnt_t[0][jnp.maximum(ord_node, 0)], 0)
+    ord_start = jnp.cumsum(ord_cnt) - ord_cnt
+    ord_start = jnp.where(o < n0, ord_start, _I32MAX).astype(i32)
+
+    new = dataclasses.replace(
+        idx,
+        node_keys=tuple(keys_t), node_child=tuple(child_t),
+        node_cnt=tuple(cnt_t),
+        ord_node=ord_node, node_pos=node_pos, ord_start=ord_start,
+        n_nodes0=n0.astype(i32), leaf_ent=leaf_ent,
+        stat_delta_passes=idx.stat_delta_passes + 1,
+        stat_propagations=idx.stat_propagations + props,
+    )
+    return new, oflow
+
+
+def merge_deletable(idx: UruvIndex, ord_del: jax.Array) -> jax.Array:
+    """True where the separator at ordinal ``ord_del`` may be deleted by
+    a leaf merge: it must NOT be slot 0 of its bottom node (entry keys
+    are subtree lower bounds — dropping a node's first entry would break
+    descent).  Skipped pairs become eligible again after a reindex."""
+    _, slot = ord_locate(idx, ord_del)
+    return slot >= 1
+
+
+def apply_merge_delta(idx: UruvIndex, ord_del: jax.Array, lb: jax.Array,
+                      valid: jax.Array) -> UruvIndex:
+    """Delete the separators at ordinals ``ord_del`` (the right members of
+    merged leaf pairs; ``lb`` their leaf ids).  Caller guarantees each is
+    at slot >= 1 of its bottom node (see :func:`merge_deletable`), so no
+    node empties and nothing propagates.  O(budget · F)."""
+    cfg = idx.cfg
+    F = cfg.fanout
+    C0 = cfg.caps[0]
+    i32 = jnp.int32
+    node, slot = ord_locate(idx, ord_del)
+    node = jnp.where(valid, node, C0)
+    keys0 = idx.node_keys[0].at[node, jnp.where(valid, slot, F)].set(
+        KEY_MAX, mode="drop")
+    child0 = idx.node_child[0].at[node, jnp.where(valid, slot, F)].set(
+        -1, mode="drop")
+    # compact the touched rows sort-free: surviving entries (key <
+    # KEY_MAX) keep their relative order, their new position is the
+    # count of survivors before them (duplicate gathers of a shared node
+    # scatter identical rows — deterministic)
+    gnode = jnp.where(valid, node, 0)
+    rk = keys0[gnode]                       # [B, F]
+    rch = child0[gnode]
+    live_e = rk < KEY_MAX
+    newpos = jnp.cumsum(live_e.astype(i32), axis=1) - live_e.astype(i32)
+    rowsB = jnp.arange(rk.shape[0], dtype=i32)[:, None]
+    ck = jnp.full(rk.shape, KEY_MAX, i32).at[
+        rowsB, jnp.where(live_e, newpos, F)].set(rk, mode="drop")
+    cch = jnp.full(rk.shape, -1, i32).at[
+        rowsB, jnp.where(live_e, newpos, F)].set(rch, mode="drop")
+    keys0 = keys0.at[node].set(ck, mode="drop")
+    child0 = child0.at[node].set(cch, mode="drop")
+    rk, rch = ck, cch
+    dcnt = jnp.zeros((C0,), i32).at[node].add(
+        jnp.where(valid, 1, 0), mode="drop")
+    cnt0 = idx.node_cnt[0] - dcnt
+
+    # reverse map: cleared leaves out, shifted survivors rewritten
+    ML = idx.leaf_ent.shape[0]
+    leaf_ent = idx.leaf_ent.at[jnp.where(valid, lb, ML)].set(-1, mode="drop")
+    sl = jnp.arange(F, dtype=i32)[None, :]
+    tmask = valid[:, None] & (sl < cnt0[gnode][:, None])
+    leaf_ent = leaf_ent.at[jnp.where(tmask, rch, ML)].set(
+        jnp.where(tmask, gnode[:, None] * F + sl, -1), mode="drop")
+
+    # spine: counts changed -> prefix refresh (node set unchanged)
+    o = jnp.arange(C0, dtype=i32)
+    liveo = o < idx.n_nodes0
+    ord_cnt = jnp.where(liveo, cnt0[jnp.maximum(idx.ord_node, 0)], 0)
+    ord_start = jnp.cumsum(ord_cnt) - ord_cnt
+    ord_start = jnp.where(liveo, ord_start, _I32MAX).astype(i32)
+
+    return dataclasses.replace(
+        idx,
+        node_keys=(keys0,) + idx.node_keys[1:],
+        node_child=(child0,) + idx.node_child[1:],
+        node_cnt=(cnt0,) + idx.node_cnt[1:],
+        ord_start=ord_start, leaf_ent=leaf_ent,
+    )
+
+
+def retarget_leaves(idx: UruvIndex, src: jax.Array, dst: jax.Array,
+                    valid: jax.Array) -> UruvIndex:
+    """Point the bottom entries of relocated leaves at their new ids
+    (lifecycle relocation: ``src -> dst``).  O(budget) scatters via the
+    reverse map — the old path remapped the whole O(ML) directory."""
+    F = idx.cfg.fanout
+    ML = idx.leaf_ent.shape[0]
+    ent = idx.leaf_ent[jnp.where(valid, src, 0)]
+    node = jnp.where(valid & (ent >= 0), ent // F, idx.cfg.caps[0])
+    slot = jnp.clip(ent % F, 0, F - 1)
+    child0 = idx.node_child[0].at[node, slot].set(
+        jnp.where(valid, dst, -1), mode="drop")
+    leaf_ent = idx.leaf_ent.at[jnp.where(valid, src, ML)].set(-1, mode="drop")
+    leaf_ent = leaf_ent.at[jnp.where(valid, dst, ML)].set(ent, mode="drop")
+    return dataclasses.replace(
+        idx,
+        node_child=(child0,) + idx.node_child[1:],
+        leaf_ent=leaf_ent,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Reindex (stop-the-world repack) + growth
+# ---------------------------------------------------------------------------
+
+def inorder(idx: UruvIndex, max_leaves: int):
+    """(sep_keys[ML], sep_leaf[ML]) in global key order, KEY_MAX / -1
+    padded — the flat-directory view, materialized on demand."""
+    p = jnp.arange(max_leaves, dtype=jnp.int32)
+    keys = sep_at(idx, p)
+    leaves = leaf_at(idx, p)
+    return keys, leaves
+
+
+@functools.partial(jax.jit, static_argnames=("max_leaves",))
+def _reindex(idx: UruvIndex, n_sep: jax.Array, *, max_leaves: int):
+    keys, leaves = inorder(idx, max_leaves)
+    valid = jnp.arange(max_leaves) < n_sep
+    keys = jnp.where(valid, keys, KEY_MAX)
+    leaves = jnp.where(valid, leaves, -1)
+    new = build(idx.cfg, max_leaves, keys, leaves, n_sep)
+    return dataclasses.replace(
+        new,
+        stat_delta_passes=idx.stat_delta_passes,
+        stat_propagations=idx.stat_propagations,
+    )
+
+
+def reindex(idx: UruvIndex, n_sep: jax.Array, max_leaves: int) -> UruvIndex:
+    """Rebuild the index from its own in-order traversal, repacked at
+    pack_fill.  The recovery path for ``OFLOW_INDEX`` (fragmentation) —
+    O(ML), stop-the-world, rare; results are unchanged by construction.
+    Works on stacked (sharded) stores via vmap (same shapes per shard)."""
+    import numpy as np
+    if np.asarray(n_sep).ndim:
+        return jax.vmap(
+            lambda ix, n: _reindex(ix, n, max_leaves=max_leaves)
+        )(idx, n_sep)
+    return _reindex(idx, n_sep, max_leaves=max_leaves)
+
+
+def grow_to(idx: UruvIndex, new_cfg: IndexConfig, new_ml: int) -> UruvIndex:
+    """Tail-extend every node pool to ``new_cfg`` capacities (same pow2
+    discipline as lifecycle.grow) and stack fresh root levels when the
+    depth grows.  Node ids, spine ordinals and every entry are preserved
+    bit-exactly — pools extend at the tail, nothing moves."""
+    F = new_cfg.fanout
+    i32 = jnp.int32
+    assert new_cfg.depth >= idx.cfg.depth
+
+    def pad_rows(x, cap, fill):
+        extra = cap - x.shape[-2]
+        if extra == 0:
+            return x
+        shape = x.shape[:-2] + (extra, x.shape[-1])
+        return jnp.concatenate([x, jnp.full(shape, fill, x.dtype)], axis=-2)
+
+    def pad_vec(x, cap, fill):
+        extra = cap - x.shape[-1]
+        if extra == 0:
+            return x
+        shape = x.shape[:-1] + (extra,)
+        return jnp.concatenate([x, jnp.full(shape, fill, x.dtype)], axis=-1)
+
+    lead = idx.ord_node.shape[:-1]            # stacked (sharded) batch dims
+    keys_t, child_t, cnt_t = [], [], []
+    for l in range(idx.cfg.depth):
+        keys_t.append(pad_rows(idx.node_keys[l], new_cfg.caps[l], KEY_MAX))
+        child_t.append(pad_rows(idx.node_child[l], new_cfg.caps[l], -1))
+        cnt_t.append(pad_vec(idx.node_cnt[l], new_cfg.caps[l], 0))
+    for l in range(idx.cfg.depth, new_cfg.depth):
+        Cl = new_cfg.caps[l]
+        k = jnp.full(lead + (Cl, F), KEY_MAX, i32).at[..., 0, 0].set(KEY_MIN)
+        c = jnp.full(lead + (Cl, F), -1, i32).at[..., 0, 0].set(0)
+        n = jnp.zeros(lead + (Cl,), i32).at[..., 0].set(1)
+        keys_t.append(k)
+        child_t.append(c)
+        cnt_t.append(n)
+    return dataclasses.replace(
+        idx,
+        node_keys=tuple(keys_t), node_child=tuple(child_t),
+        node_cnt=tuple(cnt_t),
+        ord_node=pad_vec(idx.ord_node, new_cfg.caps[0], -1),
+        node_pos=pad_vec(idx.node_pos, new_cfg.caps[0], -1),
+        ord_start=pad_vec(idx.ord_start, new_cfg.caps[0], _I32MAX),
+        leaf_ent=pad_vec(idx.leaf_ent, new_ml, -1),
+        cfg=new_cfg,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Host-side introspection + invariants (tests, check_invariants)
+# ---------------------------------------------------------------------------
+
+def directory(idx: UruvIndex, n_sep: int):
+    """Host-side flat view: (sep_keys[n_sep], sep_leaf[n_sep]) numpy."""
+    import numpy as np
+    keys, leaves = inorder(idx, idx.leaf_ent.shape[-1])
+    return (np.asarray(keys)[:n_sep], np.asarray(leaves)[:n_sep])
+
+
+def check_index(idx: UruvIndex, n_sep: int) -> None:
+    """Full index verification (host-side; see store.check_invariants):
+
+      * per-level in-node sortedness + KEY_MAX padding + cnt coherence
+      * child coverage: the root's in-order expansion visits every live
+        node exactly once; entry keys equal their child's first key as a
+        lower bound (<=), strictly increasing globally
+      * spine coherence: ord_node/node_pos inverse bijection, ord_start
+        exact prefix sums, n_nodes0 == live bottom nodes
+      * reverse map: leaf_ent is the exact inverse of bottom child slots
+    """
+    import numpy as np
+
+    ix = jax.device_get(idx)
+    cfg = ix.cfg
+    F, D = cfg.fanout, cfg.depth
+    for l in range(D):
+        k = np.asarray(ix.node_keys[l])
+        c = np.asarray(ix.node_cnt[l])
+        assert k.shape == (cfg.caps[l], F)
+        for n in range(cfg.caps[l]):
+            cnt = int(c[n])
+            assert 0 <= cnt <= F, (l, n, cnt)
+            row = k[n]
+            assert np.all(row[cnt:] == KEY_MAX), f"pad violated l{l} n{n}"
+            if cnt:
+                assert np.all(np.diff(row[:cnt].astype(np.int64)) > 0), \
+                    f"node not sorted l{l} n{n}"
+
+    # in-order expansion from the root
+    def expand(l, n):
+        cnt = int(ix.node_cnt[l][n])
+        assert cnt >= 1, f"empty live node l{l} n{n}"
+        out = []
+        for s in range(cnt):
+            key = int(ix.node_keys[l][n][s])
+            ch = int(ix.node_child[l][n][s])
+            if l == 0:
+                out.append((key, ch, n, s))
+            else:
+                sub = expand(l - 1, ch)
+                assert sub[0][0] >= key, \
+                    f"entry key not a lower bound l{l} n{n} s{s}"
+                out.extend(sub)
+        return out
+
+    flat = expand(D - 1, 0)
+    assert len(flat) == n_sep, (len(flat), n_sep)
+    keys = [e[0] for e in flat]
+    assert keys[0] == KEY_MIN, "left sentinel lost"
+    assert all(keys[i] < keys[i + 1] for i in range(len(keys) - 1)), \
+        "separators not strictly sorted"
+
+    # spine
+    bnodes = []
+    for (_, _, n, s) in flat:
+        if not bnodes or bnodes[-1] != n:
+            bnodes.append(n)
+    n0 = int(ix.n_nodes0)
+    assert n0 == len(bnodes), (n0, len(bnodes))
+    ordn = np.asarray(ix.ord_node)
+    npos = np.asarray(ix.node_pos)
+    osta = np.asarray(ix.ord_start)
+    assert ordn[:n0].tolist() == bnodes, "ord_node order broken"
+    assert np.all(ordn[n0:] == -1)
+    start = 0
+    for p, n in enumerate(bnodes):
+        assert int(npos[n]) == p, "node_pos inverse broken"
+        assert int(osta[p]) == start, (p, int(osta[p]), start)
+        start += int(ix.node_cnt[0][n])
+    assert np.all(osta[n0:] == _I32MAX)
+
+    # reverse map
+    ent = np.asarray(ix.leaf_ent)
+    seen = {}
+    for (_, leaf, n, s) in flat:
+        assert int(ent[leaf]) == n * F + s, \
+            f"leaf_ent broken for leaf {leaf}"
+        seen[leaf] = True
+    for leaf in range(ent.shape[0]):
+        if leaf not in seen:
+            assert int(ent[leaf]) == -1, f"stale leaf_ent[{leaf}]"

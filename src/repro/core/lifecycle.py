@@ -47,6 +47,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import index as I
 from repro.core import store as S
 from repro.core.ref import KEY_MAX, TOMBSTONE
 
@@ -121,8 +122,9 @@ def _grow(store: S.UruvStore, *, new_ml: int, new_mv: int,
         leaf_newnext=_pad_dim(store.leaf_newnext, -1, new_ml, -1),
         leaf_frozen=_pad_dim(store.leaf_frozen, -1, new_ml, False),
         leaf_ts=_pad_dim(store.leaf_ts, -1, new_ml, 0),
-        dir_keys=_pad_dim(store.dir_keys, -1, new_ml, KEY_MAX),
-        dir_leaf=_pad_dim(store.dir_leaf, -1, new_ml, -1),
+        index=I.grow_to(
+            store.index, I.index_config(new_ml, cfg.index_fanout), new_ml,
+        ),
         ver_value=_pad_dim(store.ver_value, -1, new_mv, 0),
         ver_ts=_pad_dim(store.ver_ts, -1, new_mv, 0),
         ver_next=_pad_dim(store.ver_next, -1, new_mv, -1),
@@ -138,8 +140,11 @@ def grow(store: S.UruvStore, *, leaves: bool = False, versions: bool = False,
 
     Capacities move to the next power-of-two bucket (``next_pool_size``),
     so repeated growth recompiles jitted consumers O(log capacity) times.
-    Leaf ids, version slots, directory positions and every timestamp are
-    preserved — the pools extend at the tail.  Works on local stores and
+    Leaf ids, version slots, index node ids/ordinals and every timestamp
+    are preserved — the pools extend at the tail (growing the leaf pool
+    tail-extends every index level under the same pow2 discipline and
+    stacks fresh root levels when the depth model deepens — Sec 11).
+    Works on local stores and
     on stacked (sharded) stores alike: the leading device axis is left
     untouched, so every shard grows together and shard shapes stay equal
     (the sharded executor's replicated-decision requirement).
@@ -184,24 +189,29 @@ def _maintain(store: S.UruvStore, phase: jax.Array, *, budget: int):
     live_slot = occupied & ~dead_slot
     live_cnt = jnp.sum(live_slot.astype(i32), axis=1)          # [ML]
 
-    # ---- pair selection: adjacent directory positions (p, p+1) with
+    # ---- pair selection: adjacent leaf ordinals (p, p+1) with
     # p ≡ phase (mod 2); alternating the phase between calls covers every
     # boundary.  Eligible: the pair has purgeable dead keys, or merging
     # the live keys fits one leaf with a member under MIN (paper's merge
     # trigger).  The first `budget` eligible pairs are rewritten. --------
     NP = ML // 2
-    pos = phase + 2 * jnp.arange(NP, dtype=i32)                # left position
+    pos = phase + 2 * jnp.arange(NP, dtype=i32)                # left ordinal
     valid = (pos + 1) < store.n_leaves
-    la = jnp.where(valid, store.dir_leaf[jnp.minimum(pos, ML - 1)], 0)
-    lb = jnp.where(valid, store.dir_leaf[jnp.minimum(pos + 1, ML - 1)], 0)
+    nl1 = jnp.maximum(store.n_leaves - 1, 0)
+    la = jnp.where(valid, I.leaf_at(store.index, jnp.minimum(pos, nl1)), 0)
+    lb = jnp.where(
+        valid, I.leaf_at(store.index, jnp.minimum(pos + 1, nl1)), 0)
     live_a, live_b = live_cnt[la], live_cnt[lb]
     # merge when a member is under the paper's MIN, or when the pair is
     # jointly at most half-full (the merged leaf then needs >= L/2 fresh
-    # inserts before it can split again — no split/merge thrash)
+    # inserts before it can split again — no split/merge thrash).  The
+    # right member's separator must be deletable from its bottom index
+    # node (slot >= 1: entry keys are subtree lower bounds — Sec 11);
+    # skipped pairs become eligible again after a reindex repack.
     mergeable = valid & (live_a + live_b <= L) & (
         (live_a < cfg.min_fill) | (live_b < cfg.min_fill)
         | (live_a + live_b <= L // 2)
-    )
+    ) & I.merge_deletable(store.index, jnp.minimum(pos + 1, nl1))
     has_dead = valid & (
         (live_a < store.leaf_count[la]) | (live_b < store.leaf_count[lb])
     )
@@ -249,29 +259,25 @@ def _maintain(store: S.UruvStore, phase: jax.Array, *, budget: int):
     ].set(True, mode="drop")
     n_merged = jnp.sum(merge.astype(i32))
 
-    # ---- directory compaction: drop the right member of merged pairs.
-    # The left member keeps its separator (all right keys exceed it), so
-    # the directory stays strictly sorted and position 0 stays KEY_MIN. --
-    dropped = jnp.zeros((ML,), bool).at[
-        jnp.where(merge, jnp.minimum(pair_pos + 1, ML - 1), ML)
-    ].set(True, mode="drop")
-    keep = (allpos < store.n_leaves) & ~dropped
-    offs = jnp.cumsum(keep.astype(i32)) - keep.astype(i32)
-    n_leaves1 = jnp.sum(keep.astype(i32))
-    w = jnp.where(keep, offs, ML)
-    dir_keys = jnp.full((ML,), KEY_MAX, i32).at[w].set(
-        store.dir_keys, mode="drop")
-    dir_leaf1 = jnp.full((ML,), -1, i32).at[w].set(
-        store.dir_leaf, mode="drop")
+    # ---- index delta: delete the right members' separators (bounded —
+    # O(budget · F); replaces the old O(ML) directory compaction).  The
+    # left member keeps its separator (all right keys exceed it), so the
+    # separator order stays strict and ordinal 0 stays KEY_MIN. ----------
+    index1 = I.apply_merge_delta(
+        store.index, jnp.minimum(pair_pos + 1, ML - 1), pair_b, merge)
+    n_leaves1 = store.n_leaves - n_merged
+    # chain splice: the left member inherits the merged-away successor
+    leaf_next = store.leaf_next.at[
+        jnp.where(merge, pair_a, ML)
+    ].set(store.leaf_next[pair_b], mode="drop")
 
     # ---- bounded relocation: move up to `budget` of the highest live
     # leaves into the lowest dead slots, then release the all-dead tail
     # of the bump allocator.  Dead slots that stay below the new n_alloc
     # remain frozen garbage for a later pass — the work per call is
-    # bounded, the reclamation is incremental. ---------------------------
-    ref = jnp.zeros((ML,), bool).at[
-        jnp.where(allpos < n_leaves1, jnp.maximum(dir_leaf1, 0), ML)
-    ].set(True, mode="drop")
+    # bounded, the reclamation is incremental.  The reverse map makes the
+    # index fixup O(budget) (the old path remapped the whole directory).
+    ref = index1.leaf_ent >= 0              # referenced by the index
     alloc = allpos < store.n_alloc
     dead = alloc & ~ref
     drank = jnp.cumsum(dead.astype(i32)) - 1
@@ -292,14 +298,27 @@ def _maintain(store: S.UruvStore, phase: jax.Array, *, budget: int):
     leaf_frozen = leaf_frozen.at[dstc].set(False, mode="drop")
     leaf_newnext = store.leaf_newnext.at[dstc].set(-1, mode="drop")
 
+    # chain fixups for the moved leaves (bounded scatters): the copied
+    # next pointer and the predecessor's link follow the relocation map
     remap = allpos.at[jnp.where(do, src, ML)].set(
         jnp.where(do, dst, 0), mode="drop")
-    dir_leaf = jnp.where(
-        allpos < n_leaves1, remap[jnp.maximum(dir_leaf1, 0)], -1
-    ).astype(i32)
-    ref2 = jnp.zeros((ML,), bool).at[
-        jnp.where(allpos < n_leaves1, jnp.maximum(dir_leaf, 0), ML)
-    ].set(True, mode="drop")
+    nxt_src = leaf_next[srcc]
+    leaf_next = leaf_next.at[dstc].set(
+        jnp.where(nxt_src >= 0, remap[jnp.maximum(nxt_src, 0)], -1),
+        mode="drop")
+    Fi = cfg.index_fanout
+    ent = index1.leaf_ent[srcc]
+    ordv = I.leaf_ordinal(index1, jnp.maximum(ent, 0) // Fi,
+                          jnp.maximum(ent, 0) % Fi)
+    has_pred = do & (ordv > 0)
+    pred = I.leaf_at(index1, jnp.maximum(ordv - 1, 0))
+    leaf_next = leaf_next.at[
+        jnp.where(has_pred, remap[jnp.maximum(pred, 0)], ML)
+    ].set(jnp.where(do, dst, -1), mode="drop")
+
+    # index entry retarget (reverse-map lookup; O(budget))
+    index2 = I.retarget_leaves(index1, src, dst, do)
+    ref2 = index2.leaf_ent >= 0
     n_alloc = jnp.maximum(jnp.max(jnp.where(ref2, allpos + 1, 0)), 1) \
         .astype(i32)
 
@@ -311,14 +330,7 @@ def _maintain(store: S.UruvStore, phase: jax.Array, *, budget: int):
     leaf_frozen = jnp.where(freed, False, leaf_frozen)
     leaf_newnext = jnp.where(freed, -1, leaf_newnext)
     leaf_ts = jnp.where(freed, 0, leaf_ts)
-
-    # leaf_next rebuilt from the compacted directory (chain stays exact)
-    nxt = jnp.where(
-        allpos + 1 < n_leaves1, dir_leaf[jnp.minimum(allpos + 1, ML - 1)], -1
-    )
-    chain_src = jnp.where(allpos < n_leaves1, dir_leaf[allpos], ML)
-    leaf_next = jnp.where(freed, -1, store.leaf_next)
-    leaf_next = leaf_next.at[chain_src].set(nxt, mode="drop")
+    leaf_next = jnp.where(freed, -1, leaf_next)
 
     reclaimed = store.n_alloc - n_alloc
     new = dataclasses.replace(
@@ -331,8 +343,7 @@ def _maintain(store: S.UruvStore, phase: jax.Array, *, budget: int):
         leaf_frozen=leaf_frozen,
         leaf_ts=leaf_ts,
         n_alloc=n_alloc,
-        dir_keys=dir_keys,
-        dir_leaf=dir_leaf,
+        index=index2,
         n_leaves=n_leaves1,
     )
     return new, reclaimed, n_merged
@@ -398,18 +409,13 @@ def leaf_accounting(store: S.UruvStore) -> Dict[str, int]:
 
 
 def live_key_count(store: S.UruvStore) -> int:
-    """Total keys held by directory-referenced leaves (host-side; frozen
+    """Total keys held by index-referenced leaves (host-side; frozen
     leavings keep stale counts and are excluded).  Tombstoned keys count
     until maintenance purges them — this is a pool-occupancy figure, not
     a liveness oracle."""
     lc = np.asarray(store.leaf_count)
-    dl = np.asarray(store.dir_leaf)
-    nl = np.asarray(store.n_leaves)
-    if lc.ndim == 1:
-        return int(lc[dl[: int(nl)]].sum())
-    return int(sum(
-        lc[s][dl[s][: int(nl[s])]].sum() for s in range(lc.shape[0])
-    ))
+    ref = np.asarray(store.index.leaf_ent) >= 0   # same shape, incl. stacked
+    return int(lc[ref].sum())
 
 
 def dead_fraction(store: S.UruvStore) -> float:
@@ -500,10 +506,16 @@ def relieve_pressure(
     otherwise — or if the burst freed nothing — double the leaf pool.
     ``OFLOW_VERSIONS``: ``compact()`` first when the pool is mostly-full
     garbage candidate (the tracker-gated GC), then double the version pool
-    until the batch provably fits.  The caller retries the device pass
-    after each step; every step strictly increases free capacity, so the
-    retry loop converges.
+    until the batch provably fits.  ``OFLOW_INDEX``: the fat-node pools
+    are fragmented (or the root overflowed) — :func:`S.reindex` repacks
+    them at pack_fill, which always frees enough slots for the retry.
+    The caller retries the device pass after each step; every step
+    strictly increases free capacity, so the retry loop converges.
     """
+    if reason & S.OFLOW_INDEX:
+        if stats is not None:
+            stats["reindexes"] = stats.get("reindexes", 0) + 1
+        store = S.reindex(store)
     if reason & S.OFLOW_LEAVES:
         before = int(np.asarray(store.n_alloc).sum())
         if dead_fraction(store) >= policy.frozen_trigger:

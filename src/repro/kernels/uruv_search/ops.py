@@ -1,11 +1,11 @@
 """Jitted public wrappers for the uruv_search kernels.
 
-``locate()`` is the full traversal contract (directory rank -> leaf gather
--> in-leaf slot), switchable between the Pallas path and the XLA oracle.
-The store routes through `repro.core.backend.locate`, which auto-detects
-TPU (compiled Pallas) vs anything else (XLA) with a `URUV_BACKEND`
-override; this module remains the kernel-level entry used by the
-interpret-mode sweeps (see DESIGN.md Sec 3.3 / Sec 7).
+``locate()`` is the full traversal contract (multi-level fat-node descent
+-> leaf gather -> in-leaf slot), switchable between the Pallas path and
+the XLA oracle.  The store routes through `repro.core.backend.locate`,
+which auto-detects TPU (compiled Pallas) vs anything else (XLA) with a
+`URUV_BACKEND` override; this module remains the kernel-level entry used
+by the interpret-mode sweeps (see DESIGN.md Sec 7 / Sec 11).
 """
 
 from __future__ import annotations
@@ -15,29 +15,31 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.uruv_search.uruv_search import leaf_slots, search_positions
-from repro.kernels.uruv_search.ref import leaf_slots_ref, search_positions_ref
+from repro.kernels.uruv_search.uruv_search import index_descend, leaf_slots
+from repro.kernels.uruv_search.ref import index_descend_ref, leaf_slots_ref
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
 def locate(
-    dir_keys: jax.Array,
-    dir_leaf: jax.Array,
+    level_keys,            # tuple l=0..D-1 of int32 [C_l, F] (bottom first)
+    level_child,           # tuple l=0..D-1 of int32 [C_l, F]
     leaf_keys: jax.Array,
     queries: jax.Array,
     *,
     use_pallas: bool = True,
     interpret: bool = True,
 ):
-    """Returns (dir_pos, leaf_id, slot, exists) for a query batch."""
+    """Returns (bottom_node, bottom_slot, leaf_id, slot, exists)."""
     if use_pallas:
-        pos = search_positions(dir_keys, queries, interpret=interpret)
+        bnode, bslot, leaf_id = index_descend(
+            tuple(level_keys), tuple(level_child), queries,
+            interpret=interpret)
     else:
-        pos = search_positions_ref(dir_keys, queries)
-    leaf_id = dir_leaf[pos]
+        bnode, bslot, leaf_id = index_descend_ref(
+            tuple(level_keys), tuple(level_child), queries)
     rows = leaf_keys[leaf_id]
     if use_pallas:
         slot, exists = leaf_slots(rows, queries, interpret=interpret)
     else:
         slot, exists = leaf_slots_ref(rows, queries)
-    return pos, leaf_id, slot, exists
+    return bnode, bslot, leaf_id, slot, exists

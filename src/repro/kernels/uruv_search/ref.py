@@ -13,6 +13,30 @@ def search_positions_ref(dir_keys: jax.Array, queries: jax.Array) -> jax.Array:
 
 
 @jax.jit
+def index_descend_ref(level_keys, level_child, queries: jax.Array):
+    """Pure-jnp oracle for the multi-level descent kernel: returns
+    (bottom_node, bottom_slot, leaf_id) of the last separator <= q."""
+    i32 = jnp.int32
+    q = jnp.asarray(queries, i32)
+    cur = jnp.zeros_like(q)
+    slot = jnp.zeros_like(q)
+    nxt = cur
+    depth = len(level_keys)
+    from repro.core.ref import KEY_MAX
+
+    for l in range(depth - 1, -1, -1):
+        rows = level_keys[l][cur]
+        slot = jnp.maximum(
+            jnp.sum(((rows <= q[:, None]) & (rows < KEY_MAX)).astype(i32),
+                    axis=1) - 1, 0)
+        nxt = jnp.take_along_axis(
+            level_child[l][cur], slot[:, None], axis=1)[:, 0]
+        if l > 0:
+            cur = nxt
+    return cur, slot, nxt
+
+
+@jax.jit
 def leaf_slots_ref(rows: jax.Array, queries: jax.Array):
     L = rows.shape[1]
     slot = jnp.sum(rows < queries[:, None], axis=1).astype(jnp.int32)

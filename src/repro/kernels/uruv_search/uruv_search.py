@@ -87,6 +87,71 @@ def search_positions(
     return jnp.maximum(pos[:P], 0)
 
 
+def _index_descend_kernel(q_ref, *refs, depth):
+    """Blocked F-way descent over the multi-level fat-node index.
+
+    ``refs`` carries (keys_l, child_l) for l = depth-1 .. 0 followed by
+    the three outputs.  Every level's node pool is VMEM-resident (the
+    whole index is ~ML/F * F ints = O(ML) — a fraction of the leaf pool);
+    a query tile descends all levels with one dynamic row gather + one
+    F-wide compare-reduce per level: O(P * F * depth) VPU compares
+    instead of the flat O(P * ML) rank of the directory era.
+    """
+    node_ref, slot_ref, leaf_ref = refs[2 * depth:]
+    q = q_ref[...]                        # [BQ]
+    cur = jnp.zeros_like(q)               # root is node 0
+    slot = jnp.zeros_like(q)
+    nxt = cur
+    for i in range(depth):                # level l = depth-1-i
+        keys = refs[2 * i][...]           # [C_l, F]
+        child = refs[2 * i + 1][...]
+        rows = keys[cur]                  # [BQ, F] dynamic row gather
+        # live entries only (KEY_MAX = padding; q may be a KEY_MAX sentinel)
+        slot = jnp.maximum(
+            jnp.sum(((rows <= q[:, None]) & (rows < KEY_MAX))
+                    .astype(jnp.int32), axis=1) - 1, 0)
+        nxt = jnp.take_along_axis(child[cur], slot[:, None], axis=1)[:, 0]
+        if i < depth - 1:
+            cur = nxt
+    node_ref[...] = cur
+    slot_ref[...] = slot
+    leaf_ref[...] = nxt
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
+def index_descend(
+    level_keys,            # tuple l=0..D-1 of int32 [C_l, F]
+    level_child,           # tuple l=0..D-1 of int32 [C_l, F]
+    queries: jax.Array,
+    *,
+    block_q: int = 256,
+    interpret: bool = True,
+):
+    """Root->leaf descent: returns (bottom_node, bottom_slot, leaf_id)
+    of the last separator <= q — the kernel twin of
+    ``repro.core.index.descend``."""
+    depth = len(level_keys)
+    P = queries.shape[0]
+    bq = min(block_q, P)
+    pad = (-P) % bq
+    q = jnp.pad(queries, (0, pad), constant_values=KEY_MAX - 1)
+    tables = []
+    in_specs = [pl.BlockSpec((bq,), lambda i: (i,))]
+    for l in range(depth - 1, -1, -1):
+        for t in (level_keys[l], level_child[l]):
+            tables.append(t)
+            in_specs.append(pl.BlockSpec(t.shape, lambda i: (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_index_descend_kernel, depth=depth),
+        grid=((P + pad) // bq,),
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((bq,), lambda i: (i,))] * 3,
+        out_shape=[jax.ShapeDtypeStruct((P + pad,), jnp.int32)] * 3,
+        interpret=interpret,
+    )(q, *tables)
+    return out[0][:P], out[1][:P], out[2][:P]
+
+
 def _slot_kernel(rows_ref, q_ref, slot_ref, exists_ref):
     rows = rows_ref[...]                  # [BQ, L]
     q = q_ref[...]                        # [BQ]

@@ -1,0 +1,135 @@
+"""Boundary-key correctness across both backends (ISSUE 5 satellite).
+
+Sweeps the edges of the key domain — KEY_MIN+1 (one above the left
+separator sentinel) and KEY_MAX-1/KEY_MAX-2 (just under the padding
+sentinel) — through inserts, deletes, searches and ranges, plus ranges
+that straddle the left sentinel and the duplicate-separator-after-merge
+scenario, under both the XLA oracle and the Pallas interpreter.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import backend as BE
+from repro.core import batch as B
+from repro.core import lifecycle as LC
+from repro.core import store as S
+from repro.core.index import KEY_MIN
+from repro.core.ref import (
+    KEY_MAX, NOT_FOUND, OP_DELETE, OP_INSERT, OP_SEARCH, RefStore,
+)
+
+BACKENDS = ["xla", "pallas_interpret"]
+
+LO = KEY_MIN + 1          # smallest usable key (KEY_MIN is the sentinel)
+HI = KEY_MAX - 2          # largest usable key (< KEY_MAX - 1 per ref.py)
+EDGES = [LO, LO + 1, -1, 0, 1, HI - 1, HI]
+
+
+def _cfg():
+    return S.UruvConfig(leaf_cap=8, max_leaves=128, max_versions=1 << 12,
+                        tracker_cap=16, max_chain=16, index_fanout=4)
+
+
+@pytest.fixture(autouse=True)
+def _reset_backend():
+    yield
+    BE.set_backend(None)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_edge_key_crud(backend):
+    BE.set_backend(backend)
+    st = S.create(_cfg())
+    ref = RefStore()
+    keys = np.asarray(EDGES, np.int32)
+    vals = np.arange(1, len(keys) + 1, dtype=np.int32)
+    ops = [(OP_INSERT, int(k), int(v)) for k, v in zip(keys, vals)]
+    st, res = B.apply_batch(st, ops)
+    assert res == ref.apply_batch(ops)
+    S.check_invariants(st)
+
+    probe = np.asarray(EDGES + [LO - 1 + 2, HI + 1], np.int32)
+    got = np.asarray(S.bulk_lookup(st, probe, int(st.ts)))
+    want = [ref.search_at(int(k), ref.ts) for k in probe]
+    assert got.tolist() == want
+
+    # delete the extremes, re-search
+    ops = [(OP_DELETE, LO, 0), (OP_DELETE, HI, 0),
+           (OP_SEARCH, LO, 0), (OP_SEARCH, HI, 0)]
+    st, res = B.apply_batch(st, ops)
+    assert res == ref.apply_batch(ops)
+    S.check_invariants(st)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_edge_ranges_and_left_sentinel_straddle(backend):
+    BE.set_backend(backend)
+    st = S.create(_cfg())
+    ref = RefStore()
+    keys = np.concatenate([
+        np.asarray(EDGES, np.int64),
+        np.arange(-50, 50, 7, dtype=np.int64),
+    ]).astype(np.int32)
+    vals = (np.arange(len(keys)) + 1).astype(np.int32)
+    ops = [(OP_INSERT, int(k), int(v)) for k, v in zip(keys, vals)]
+    st, res = B.apply_batch(st, ops)
+    ref.apply_batch(ops)
+    ts = int(st.ts)
+
+    intervals = [
+        (KEY_MIN, KEY_MAX - 2),      # everything, from the sentinel itself
+        (KEY_MIN, 0),                # straddles the left sentinel
+        (KEY_MIN + 1, KEY_MIN + 1),  # point query at the smallest key
+        (LO, LO),
+        (HI, HI),
+        (HI - 1, KEY_MAX - 2),       # right edge window
+        (0, -1),                     # inverted: empty, never truncated
+        (-10, 10),
+    ]
+    k1 = np.asarray([a for a, _ in intervals], np.int32)
+    k2 = np.asarray([b for _, b in intervals], np.int32)
+    pages = B.bulk_range_all(st, k1, k2, ts, max_results=16,
+                             scan_leaves=2, max_rounds=2)
+    for (a, b), got in zip(intervals, pages):
+        assert got == ref.range_query(int(a), int(b), ts), (a, b)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_duplicate_separator_after_merge(backend):
+    """A separator deleted by a leaf merge may be re-created verbatim by
+    a later split; descent, ranges and invariants must hold across the
+    delete/merge/re-insert cycle."""
+    BE.set_backend(backend)
+    st = S.create(_cfg())
+    ref = RefStore()
+    keys = np.arange(0, 32, dtype=np.int32)
+    ops = [(OP_INSERT, int(k), int(k) + 1) for k in keys]
+    st, _ = B.apply_batch(st, ops)
+    ref.apply_batch(ops)
+    assert int(st.n_leaves) >= 3
+    seps0 = S.directory(st)[0].tolist()
+
+    # tombstone the upper half, then merge its leaves away
+    ops = [(OP_DELETE, int(k), 0) for k in keys[12:]]
+    st, _ = B.apply_batch(st, ops)
+    ref.apply_batch(ops)
+    n0 = int(st.n_leaves)
+    for p in range(8):
+        st, _, merged = LC.maintain(st, 32, phase=p % 2)
+        S.check_invariants(st)
+    assert int(st.n_leaves) < n0, "no leaf merge happened; resize the test"
+    assert S.live_items(st) == ref.live_items()
+
+    # re-insert: splits may re-create previously deleted separators
+    ops = [(OP_INSERT, int(k), int(k) + 7) for k in keys[8:]]
+    st, res = B.apply_batch(st, ops)
+    assert res == ref.apply_batch(ops)
+    S.check_invariants(st)
+    seps1 = S.directory(st)[0].tolist()
+    assert len(set(seps1)) == len(seps1), "duplicate live separators"
+    ts = int(st.ts)
+    got = B.bulk_range_all(st, [0], [64], ts, max_results=64)[0]
+    assert got == ref.range_query(0, 64, ts)
+    assert S.live_items(st) == ref.live_items()

@@ -114,8 +114,8 @@ def test_explicit_op_ts_subset_application():
     # version timestamps agree key-by-key
     for key, _ in S.live_items(full_st):
         q = jnp.asarray([key], jnp.int32)
-        _, _, _, _, vh_a = S._locate(full_st, q)
-        _, _, _, _, vh_b = S._locate(sub_st, q)
+        _, _, _, _, _, vh_a = S._locate(full_st, q)
+        _, _, _, _, _, vh_b = S._locate(sub_st, q)
         assert int(full_st.ver_ts[int(vh_a[0])]) == int(sub_st.ver_ts[int(vh_b[0])])
 
 
@@ -245,12 +245,13 @@ assert np.unique(np.asarray(st.ts)).size == 1   # replicated clock agrees
 sh = jax.device_get(st)
 checked = 0
 for shard in range(4):
-    for p in range(int(sh.n_leaves[shard])):
-        lid = int(sh.dir_leaf[shard][p])
+    ents = np.asarray(sh.index.leaf_ent[shard])
+    for lid in np.nonzero(ents >= 0)[0]:
+        lid = int(lid)
         for j in range(int(sh.leaf_count[shard][lid])):
             k = int(sh.leaf_keys[shard][lid, j])
             vh = int(sh.leaf_vhead[shard][lid, j])
-            _, _, _, ex, vh1 = S._locate(single, jnp.asarray([k], jnp.int32))
+            _, _, _, _, ex, vh1 = S._locate(single, jnp.asarray([k], jnp.int32))
             assert bool(ex[0]), k
             assert int(sh.ver_ts[shard][vh]) == int(single.ver_ts[int(vh1[0])]), k
             checked += 1

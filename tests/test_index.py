@@ -1,0 +1,327 @@
+"""Multi-level fat-node index battery (repro.core.index; DESIGN.md Sec 11).
+
+Covers: packed build vs the flat-directory oracle, delta-vs-rebuild
+equivalence under random structural churn, bottom-up node-split
+propagation at small fanout, the OFLOW_INDEX atomic reject, reindex
+defragmentation, growth tail-extension with depth increase, and the
+index counters.  The full-store invariant checker (per-level sortedness,
+child coverage, spine/reverse-map coherence, leaf_next == leftmost-
+descent order) runs after every structural step.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import batch as B
+from repro.core import index as I
+from repro.core import lifecycle as LC
+from repro.core import store as S
+from repro.core.ref import (
+    KEY_MAX, OP_DELETE, OP_INSERT, OP_SEARCH, RefStore,
+)
+
+RNG = np.random.default_rng(42)
+
+
+def _cfg(**kw):
+    base = dict(leaf_cap=8, max_leaves=256, max_versions=1 << 13,
+                tracker_cap=16, max_chain=16, index_fanout=4)
+    base.update(kw)
+    return S.UruvConfig(**base)
+
+
+def _ingest(st, ref, rng, rounds, width=32, universe=4000, p_ins=0.6,
+            p_del=0.25, check_every=1):
+    for it in range(rounds):
+        r = rng.random(width)
+        codes = np.where(r < p_ins, OP_INSERT,
+                         np.where(r < p_ins + p_del, OP_DELETE,
+                                  OP_SEARCH)).astype(np.int32)
+        keys = rng.integers(0, universe, width).astype(np.int32)
+        vals = (keys % 97 + 1).astype(np.int32)
+        ops = [(int(c), int(k), int(v))
+               for c, k, v in zip(codes, keys, vals)]
+        st, res = B.apply_batch(st, ops)
+        assert res == ref.apply_batch(ops)
+        if (it + 1) % check_every == 0:
+            S.check_invariants(st)
+    return st
+
+
+# ---------------------------------------------------------------------------
+# build vs flat oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_sep,fanout", [(1, 4), (3, 4), (40, 4),
+                                          (200, 8), (250, 16)])
+def test_build_matches_flat_oracle(n_sep, fanout):
+    ML = 256
+    seps = np.sort(RNG.choice(100_000, n_sep, replace=False)).astype(np.int32)
+    seps[0] = I.KEY_MIN
+    leaves = RNG.permutation(ML)[:n_sep].astype(np.int32)
+    pad_k = np.full(ML, KEY_MAX, np.int32)
+    pad_k[:n_sep] = seps
+    pad_l = np.full(ML, -1, np.int32)
+    pad_l[:n_sep] = leaves
+    idx = I.build(I.index_config(ML, fanout), ML, pad_k, pad_l,
+                  jnp.asarray(n_sep, jnp.int32))
+    I.check_index(idx, n_sep)
+
+    q = np.concatenate([
+        RNG.integers(-1000, 101_000, 256).astype(np.int32),
+        seps, seps + 1, seps - 1,
+        np.array([I.KEY_MIN, I.KEY_MIN + 1, KEY_MAX - 1], np.int32),
+    ])
+    # descend == flat searchsorted rank
+    want = np.maximum(
+        np.searchsorted(seps, q, side="right").astype(np.int32) - 1, 0)
+    bnode, bslot, leaf = I.descend(idx, jnp.asarray(q))
+    got = np.asarray(I.leaf_ordinal(idx, bnode, bslot))
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(np.asarray(leaf), leaves[want])
+    np.testing.assert_array_equal(np.asarray(I.rank_right(idx, jnp.asarray(q))),
+                                  want + 1)
+    # select: leaf_at / sep_at over every live ordinal
+    p = jnp.arange(n_sep, dtype=jnp.int32)
+    np.testing.assert_array_equal(np.asarray(I.leaf_at(idx, p)), leaves)
+    np.testing.assert_array_equal(np.asarray(I.sep_at(idx, p)), seps)
+    # flat view round-trips
+    dk, dl = I.directory(idx, n_sep)
+    np.testing.assert_array_equal(dk, seps)
+    np.testing.assert_array_equal(dl, leaves)
+
+
+def test_depth1_build_packs_into_root():
+    """ML <= F yields a depth-1 index whose root IS the bottom level:
+    build must pack EVERY separator into node 0 — descent never leaves
+    it (regression: packing at pack_fill spilled entries past 3F/4 into
+    an unreachable second node)."""
+    ML = F = 16
+    n_sep = 16                         # > pack_fill(16) == 12
+    cfg = I.index_config(ML, F)
+    assert cfg.depth == 1
+    seps = (np.arange(n_sep, dtype=np.int64) * 10).astype(np.int32)
+    seps[0] = I.KEY_MIN
+    leaves = np.arange(n_sep, dtype=np.int32)
+    idx = I.build(cfg, ML, seps, leaves, jnp.asarray(n_sep, jnp.int32))
+    I.check_index(idx, n_sep)
+    q = np.concatenate([seps, seps + 1]).astype(np.int32)
+    _, _, leaf = I.descend(idx, jnp.asarray(q))
+    want = np.maximum(
+        np.searchsorted(seps, q, side="right").astype(np.int32) - 1, 0)
+    np.testing.assert_array_equal(np.asarray(leaf), leaves[want])
+    # the same geometry end-to-end: a depth-1 store past 3F/4 leaves,
+    # through compact (a fresh packed build) and a depth-deepening grow
+    st = S.create(_cfg(max_leaves=16, index_fanout=16, leaf_cap=4))
+    ref = RefStore()
+    k = 0
+    while int(st.n_leaves) <= 12:      # past pack_fill, inside the pool
+        ops = [(OP_INSERT, k + i, k + i + 1) for i in range(4)]
+        st, res = B.apply_batch(st, ops)
+        assert res == ref.apply_batch(ops)
+        k += 4
+    assert st.index.cfg.depth == 1 and int(st.n_leaves) > 12
+    S.check_invariants(st)
+    st2, _ = S.compact(st)
+    S.check_invariants(st2)
+    assert S.live_items(st2) == ref.live_items()
+    g = LC.grow(st, leaves=True)
+    S.check_invariants(g)
+    assert S.live_items(g) == ref.live_items()
+
+
+# ---------------------------------------------------------------------------
+# delta application == stop-the-world rebuild (the tentpole equivalence)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fanout", [4, 8])
+def test_delta_matches_rebuild_under_churn(fanout):
+    rng = np.random.default_rng(fanout)
+    st = S.create(_cfg(index_fanout=fanout))
+    ref = RefStore()
+    for it in range(14):
+        st = _ingest(st, ref, rng, 1, width=48)
+        # the incrementally-maintained index must expose EXACTLY the flat
+        # view a from-scratch repack would
+        repacked = S.reindex(st)
+        a = S.directory(st)
+        b = S.directory(repacked)
+        np.testing.assert_array_equal(a[0], b[0])
+        np.testing.assert_array_equal(a[1], b[1])
+        S.check_invariants(repacked)
+    assert S.live_items(st) == ref.live_items()
+
+
+def test_node_split_propagation_small_fanout():
+    """fanout=4 forces a deep tree whose node splits cascade upward; the
+    propagation counter observes them and invariants hold throughout."""
+    rng = np.random.default_rng(7)
+    st = S.create(_cfg(index_fanout=4, max_leaves=512,
+                       max_versions=1 << 14))
+    ref = RefStore()
+    st = _ingest(st, ref, rng, 30, width=64, universe=50_000, p_del=0.1)
+    assert st.index.cfg.depth >= 3
+    assert int(st.index.stat_delta_passes) > 0
+    assert int(st.index.stat_propagations) > 0, \
+        "no node split ever propagated above the bottom level"
+    assert S.live_items(st) == ref.live_items()
+
+
+def test_version_only_batches_skip_the_index():
+    """Overwrite/search-only batches must not touch the index at all —
+    the light path's structural skip extends to the delta pass."""
+    st = S.create(_cfg())
+    keys = np.arange(0, 40, dtype=np.int32)
+    st, _, ok = S.bulk_apply(st, np.full(40, OP_INSERT, np.int32), keys,
+                             keys + 1)
+    st, _ = B.apply_batch(st, [(OP_INSERT, int(k), int(k) + 1)
+                               for k in keys])
+    before = int(st.index.stat_delta_passes)
+    st, _, ok = S.bulk_apply(
+        st, np.full(40, OP_INSERT, np.int32), keys, keys + 2)  # overwrites
+    assert bool(ok)
+    assert int(st.index.stat_delta_passes) == before
+    st, _, ok = S.bulk_apply(
+        st, np.full(40, OP_SEARCH, np.int32), keys, keys)
+    assert bool(ok)
+    assert int(st.index.stat_delta_passes) == before
+
+
+# ---------------------------------------------------------------------------
+# overflow reject + reindex recovery
+# ---------------------------------------------------------------------------
+
+def test_split_delta_overflow_rejects_atomically():
+    """More node splits than free pool slots -> oflow=True; the input
+    index is untouched (functional reject)."""
+    ML, F = 256, 4
+    cfg = I.index_config(ML, F)
+    n_sep = 250
+    seps = np.arange(n_sep, dtype=np.int32) * 10
+    seps[0] = I.KEY_MIN
+    pad_k = np.full(ML, KEY_MAX, np.int32)
+    pad_k[:n_sep] = seps
+    pad_l = np.full(ML, -1, np.int32)
+    pad_l[:n_sep] = np.arange(n_sep, dtype=np.int32)
+    idx = I.build(cfg, ML, pad_k, pad_l, jnp.asarray(n_sep, jnp.int32))
+    free = int(cfg.caps[0]) - int(np.asarray(idx.n_nodes0))
+    # one insert into every live leaf's entry -> every bottom node gains
+    # its cnt again -> (pack_fill=3 -> new_cnt=6 > F) every node splits
+    P = n_sep
+    valid = jnp.ones((P,), bool)
+    gkey = jnp.asarray(seps)
+    old_leaf = jnp.asarray(pad_l[:n_sep])
+    left = jnp.arange(P, dtype=jnp.int32) + 1000
+    right = jnp.arange(P, dtype=jnp.int32) + 5000
+    rkey = jnp.asarray(seps + 5)
+    new_idx, oflow = I.apply_split_delta(idx, valid, gkey, old_leaf, left,
+                                         right, rkey)
+    assert int(np.asarray(idx.n_nodes0)) > free, "test premise broken"
+    assert bool(oflow), "expected node-pool overflow"
+    # the ORIGINAL index is still intact (callers discard new_idx)
+    I.check_index(idx, n_sep)
+
+
+def test_fragmentation_reindex_packs():
+    """Merge churn leaves underfull nodes behind; reindex repacks them to
+    pack_fill and every result is unchanged."""
+    rng = np.random.default_rng(3)
+    st = S.create(_cfg(leaf_cap=8, index_fanout=4))
+    ref = RefStore()
+    st = _ingest(st, ref, rng, 10, width=48, universe=2000, p_ins=0.8,
+                 p_del=0.05)
+    # tombstone most keys, then merge leaves away
+    live = [k for k, _ in ref.live_items()]
+    dels = np.asarray(live[::2] + live[1::4], np.int32)
+    for i in range(0, len(dels), 32):
+        chunk = dels[i:i + 32]
+        ops = [(OP_DELETE, int(k), 0) for k in chunk]
+        st, res = B.apply_batch(st, ops)
+        assert res == ref.apply_batch(ops)
+    for p in range(6):
+        st, _, _ = LC.maintain(st, 64, phase=p % 2)
+        S.check_invariants(st)
+    n_nodes_before = int(np.asarray(st.index.n_nodes0))
+    packed = S.reindex(st)
+    S.check_invariants(packed)
+    assert int(np.asarray(packed.index.n_nodes0)) <= n_nodes_before
+    assert S.live_items(packed) == ref.live_items()
+    # reads at a historic snapshot are byte-identical across the repack
+    snap = int(st.ts) - 5
+    probe = jnp.arange(0, 2000, 3, dtype=jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(S.bulk_lookup(packed, probe, snap)),
+        np.asarray(S.bulk_lookup(st, probe, snap)))
+
+
+# ---------------------------------------------------------------------------
+# growth
+# ---------------------------------------------------------------------------
+
+def test_grow_tail_extends_and_deepens():
+    rng = np.random.default_rng(9)
+    st = S.create(_cfg(max_leaves=64, index_fanout=4, leaf_cap=8))
+    ref = RefStore()
+    st = _ingest(st, ref, rng, 6, width=32, universe=1500)
+    d0 = st.index.cfg.depth
+    g = LC.grow(st, leaves=True)
+    assert g.cfg.max_leaves == 128
+    assert g.index.cfg.depth >= d0
+    for l in range(d0):
+        old = np.asarray(st.index.node_keys[l])
+        new = np.asarray(g.index.node_keys[l])
+        np.testing.assert_array_equal(new[: old.shape[0]], old)
+    S.check_invariants(g)
+    assert S.live_items(g) == ref.live_items()
+    # the grown (possibly deeper) tree keeps absorbing deltas
+    g = _ingest(g, ref, rng, 6, width=32, universe=1500)
+    assert S.live_items(g) == ref.live_items()
+
+
+@pytest.mark.slow
+def test_growth_to_64k_leaves():
+    """Sustained ingest to a 64k-leaf pool: the index self-sizes through
+    ~8 doublings, stays coherent, and structural cost stays delta-shaped
+    (no O(ML) rebuild — asserted via the delta counter equaling the
+    number of structural passes).  Excluded from tier-1 via the `slow`
+    marker."""
+    from repro import api
+
+    rng = np.random.default_rng(64)
+    db = api.Uruv(api.UruvConfig(leaf_cap=4, max_leaves=256,
+                                 max_versions=1 << 16, index_fanout=16))
+    n_keys = 200_000
+    keys = rng.choice(20_000_000, n_keys, replace=False).astype(np.int32)
+    for i in range(0, n_keys, 4096):
+        db.apply(api.OpBatch.inserts(keys[i:i + 4096],
+                                     keys[i:i + 4096] % 997 + 1))
+    st = db.store
+    assert int(st.n_leaves) >= 1 << 15, int(st.n_leaves)
+    assert st.cfg.max_leaves >= 1 << 16
+    S.check_invariants(st)
+    assert db.stats["index_delta_passes"] > 0
+    probe = keys[rng.integers(0, n_keys, 4096)]
+    got = db.lookup(probe)
+    np.testing.assert_array_equal(got, probe % 997 + 1)
+
+
+# ---------------------------------------------------------------------------
+# counters through the client
+# ---------------------------------------------------------------------------
+
+def test_client_surfaces_index_counters():
+    from repro import api
+
+    db = api.Uruv(_cfg())
+    assert db.stats["index_delta_passes"] == 0
+    ks = np.arange(0, 200, dtype=np.int32)
+    db.apply(api.OpBatch.inserts(ks, ks + 1))
+    s = db.stats
+    assert s["index_delta_passes"] >= 1
+    assert s["index_propagations"] >= 0
+    # overwrites ride the light path: no further delta passes
+    before = db.stats["index_delta_passes"]
+    db.apply(api.OpBatch.inserts(ks, ks + 2))
+    assert db.stats["index_delta_passes"] == before

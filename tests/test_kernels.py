@@ -33,6 +33,41 @@ def test_search_positions_sweep(n_dir, n_q, bq, bd):
     np.testing.assert_array_equal(got, want)
 
 
+@pytest.mark.parametrize("fanout,n_sep,n_q,bq", [
+    (4, 40, 64, 16), (8, 200, 333, 64), (16, 250, 64, 256),
+])
+def test_index_descend_sweep(fanout, n_sep, n_q, bq):
+    """Blocked F-way multi-level descent kernel vs the pure-jnp oracle
+    (and the flat searchsorted rank) across fanouts/depths."""
+    from repro.core import index as I
+    from repro.kernels.uruv_search.uruv_search import index_descend
+    from repro.kernels.uruv_search.ref import index_descend_ref
+
+    ML = 256
+    seps = np.sort(RNG.choice(10**6, n_sep, replace=False)).astype(np.int32)
+    seps[0] = -(2**31)
+    pad_k = np.full(ML, KEY_MAX, np.int32)
+    pad_k[:n_sep] = seps
+    pad_l = np.full(ML, -1, np.int32)
+    pad_l[:n_sep] = np.arange(n_sep, dtype=np.int32)
+    idx = I.build(I.index_config(ML, fanout), ML, pad_k, pad_l,
+                  jnp.asarray(n_sep, jnp.int32))
+    q = np.concatenate([
+        RNG.integers(-10, 10**6 + 10, n_q).astype(np.int32),
+        seps[:8], seps[:8] + 1, np.array([KEY_MAX - 1], np.int32),
+    ])
+    got = index_descend(idx.node_keys, idx.node_child, jnp.asarray(q),
+                        block_q=bq)
+    want = index_descend_ref(idx.node_keys, idx.node_child, jnp.asarray(q))
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    # descent rank == flat searchsorted over the live separators
+    ordgot = np.asarray(I.leaf_ordinal(idx, got[0], got[1]))
+    ordwant = np.maximum(
+        np.searchsorted(seps, q, side="right").astype(np.int32) - 1, 0)
+    np.testing.assert_array_equal(ordgot, ordwant)
+
+
 @pytest.mark.parametrize("P,L,bq", [(16, 8, 8), (100, 32, 32), (257, 16, 64)])
 def test_leaf_slots_sweep(P, L, bq):
     rows = np.sort(RNG.integers(0, 500, (P, L)), axis=1).astype(np.int32)
@@ -52,9 +87,9 @@ def test_locate_end_to_end_matches_store():
     for i in range(0, 100, 16):
         st, _ = B.apply_updates(st, keys[i:i+16], keys[i:i+16])
     q = RNG.integers(0, 1100, 64).astype(np.int32)
-    pos, leaf, slot, exists = locate(
-        st.dir_keys, st.dir_leaf, st.leaf_keys, jnp.asarray(q),
-        use_pallas=True, interpret=True)
+    bnode, bslot, leaf, slot, exists = locate(
+        st.index.node_keys, st.index.node_child, st.leaf_keys,
+        jnp.asarray(q), use_pallas=True, interpret=True)
     vals = np.where(np.asarray(exists),
                     np.asarray(q), -1)
     live = dict(S.live_items(st))

@@ -41,14 +41,12 @@ def _assert_accounting(store):
     ``n_alloc - reclaimed == live + frozen`` at all times."""
     acc = LC.leaf_accounting(store)
     assert acc["n_alloc"] == acc["live"] + acc["dead"], acc
-    # frozen flags and directory references must be disjoint
+    # frozen flags and index references must be disjoint
     s = jax.device_get(store)
     frozen = np.atleast_2d(np.asarray(s.leaf_frozen))
-    dir_leaf = np.atleast_2d(np.asarray(s.dir_leaf))
-    n_leaves = np.atleast_1d(np.asarray(s.n_leaves))
+    refd = np.atleast_2d(np.asarray(s.index.leaf_ent)) >= 0
     for sh in range(frozen.shape[0]):
-        refd = dir_leaf[sh][: n_leaves[sh]]
-        assert not frozen[sh][refd].any(), "directory points at frozen leaf"
+        assert not frozen[sh][refd[sh]].any(), "index points at frozen leaf"
 
 
 def _ingest(db, ref, rng, n_rounds, width=96, p_ins=0.6, universe=200_000):
@@ -88,11 +86,25 @@ def test_grow_is_bit_exact():
     assert g.cfg.tracker_cap == 2 * st.cfg.tracker_cap
     ml = st.cfg.max_leaves
     for name in ("leaf_keys", "leaf_vhead", "leaf_count", "leaf_next",
-                 "leaf_newnext", "leaf_frozen", "leaf_ts", "dir_keys",
-                 "dir_leaf"):
+                 "leaf_newnext", "leaf_frozen", "leaf_ts"):
         np.testing.assert_array_equal(
             np.asarray(getattr(g, name))[:ml], np.asarray(getattr(st, name)),
             err_msg=name)
+    # the index grows by tail-extension too: every pre-growth node pool is
+    # a bit-exact prefix, and the spine/reverse-map entries are preserved
+    for l in range(st.index.cfg.depth):
+        for fld in ("node_keys", "node_child", "node_cnt"):
+            old = np.asarray(getattr(st.index, fld)[l])
+            new = np.asarray(getattr(g.index, fld)[l])
+            np.testing.assert_array_equal(new[: old.shape[0]], old,
+                                          err_msg=f"{fld}[{l}]")
+    np.testing.assert_array_equal(
+        np.asarray(g.index.leaf_ent)[:ml], np.asarray(st.index.leaf_ent))
+    c0 = st.index.cfg.caps[0]
+    for fld in ("ord_node", "node_pos", "ord_start"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(g.index, fld))[:c0],
+            np.asarray(getattr(st.index, fld)), err_msg=fld)
     for name in ("ver_value", "ver_ts", "ver_next"):
         np.testing.assert_array_equal(
             np.asarray(getattr(g, name))[: st.cfg.max_versions],

@@ -381,17 +381,17 @@ def test_window_closes_one_leaf_before_k2():
     resume at the first unscanned separator (no key skipped/duplicated)."""
     st, ref = _dense_store(n=64, leaf_cap=8)
     ts = int(st.ts)
-    s = jnp.asarray(st.dir_keys)
+    seps, _ = S.directory(st)
     n_leaves = int(st.n_leaves)
     assert n_leaves >= 4
     # k2 = last key of leaf 2; scan budget covers leaves 0..1 only
-    k2 = int(np.asarray(st.dir_keys)[3]) - 1
+    k2 = int(seps[3]) - 1
     k, v, cnt, trunc, resume = S.bulk_range(
         st, np.array([0], np.int32), np.array([k2], np.int32), ts,
         max_results=64, scan_leaves=1, max_rounds=2,
     )
     assert bool(trunc[0])
-    assert int(resume[0]) == int(np.asarray(st.dir_keys)[2])
+    assert int(resume[0]) == int(seps[2])
     ks = np.asarray(k)[0, :int(cnt[0])]
     assert ks.max() < int(resume[0])
     got = B.bulk_range_all(st, [0], [k2], ts,

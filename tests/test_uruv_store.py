@@ -193,12 +193,12 @@ def test_paper_leaf_protocol_fields():
     keys = np.arange(0, 9, dtype=np.int32)       # overflows L=8 -> split
     st, _ = B.apply_updates(st, keys[:8], keys[:8])
     assert int(st.n_leaves) == 1
-    old_leaf = int(st.dir_leaf[0])
+    old_leaf = int(S.directory(st)[1][0])
     st, _ = B.apply_updates(st, keys[8:], keys[8:])
     assert int(st.n_leaves) == 2
     assert bool(st.leaf_frozen[old_leaf])
     fwd = int(st.leaf_newnext[old_leaf])
-    assert fwd == int(st.dir_leaf[0])            # newNext -> replacement left
+    assert fwd == int(S.directory(st)[1][0])     # newNext -> replacement left
     # leaf chain matches directory order and timestamps were stamped
     S.check_invariants(st)
     assert int(st.leaf_ts[fwd]) > 0
