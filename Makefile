@@ -1,5 +1,5 @@
 .PHONY: check test test-slow test-range api examples docs bench-kernels \
-	bench-mixed bench-range bench-lifecycle bench-index
+	bench-mixed bench-range bench-lifecycle bench-index bench-serve
 
 check:
 	bash scripts/check.sh
@@ -43,6 +43,12 @@ bench-lifecycle:
 # locate at depth 1 vs multi-level; writes BENCH_index.json
 bench-index:
 	PYTHONPATH=src python -m benchmarks.run --quick --only index
+
+# pipelined serving front end: closed-loop tail-latency matrix
+# (zipf/uniform mixes, p50/p95/p99 per op, saturation throughput vs the
+# synchronous per-request baseline); writes BENCH_serve.json
+bench-serve:
+	PYTHONPATH=src python -m benchmarks.run --quick --only serve
 
 # extract + run every fenced ```python block in README.md / DESIGN.md
 # under URUV_BACKEND=pallas_interpret (docs can never rot)

@@ -1,0 +1,265 @@
+"""Closed-loop load generator + tail-latency harness for the serving
+front end (``repro.serve.coalescer``); writes BENCH_serve.json.
+
+Workload model follows the MTASet evaluation matrix (arXiv:2507.20041):
+mixed CRUD/range MIXES crossed with key-popularity DISTRIBUTIONS
+(uniform and zipfian — the skewed case is where coalescing policy earns
+its keep) and ARRIVAL shapes (steady closed loop vs bursty waves).  Each
+simulated client keeps exactly one small request outstanding (closed
+loop): it submits, waits for its :class:`OpFuture`, records the
+submit→complete wall time, and immediately submits the next — so the
+measured throughput is the saturation point of the admission pipeline,
+and the recorded latencies are true per-op queueing + batching +
+execution times (reported as p50/p95/p99 microseconds per op).
+
+Every cell also replays the EXACT same request stream through a
+synchronous per-request ``Uruv.apply`` baseline on an identical store —
+the speedup column is measured in the same run, same machine, same
+store state.  The quick cells gate CI: the pipelined front end must
+reach >= 2x the synchronous saturation throughput.
+
+A separate burst phase floods the admission queue 10_000 requests deep
+before the first drain — the regression harness for the former O(n)
+``list.pop(0)`` admission queue (quadratic drain; now a deque).
+
+Run: PYTHONPATH=src python -m benchmarks.run --only serve [--quick]
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.api import OpBatch, Uruv, UruvConfig
+from repro.serve.coalescer import AdmissionPolicy, Coalescer
+
+UNIVERSE = 1 << 20          # key domain (well inside [1, KEY_MAX - 2])
+RESIDENT = 50_000           # prefilled live keys
+ZIPF_S = 1.1
+ZIPF_RANKS = 4096
+
+# MTASet-style op mixes: (insert, delete, search, range) fractions
+MIXES: Dict[str, Tuple[float, float, float, float]] = {
+    "update_heavy": (0.35, 0.15, 0.50, 0.00),
+    "read_heavy":   (0.05, 0.05, 0.90, 0.00),
+    "range_mix":    (0.10, 0.05, 0.75, 0.10),
+}
+
+# cell = (distribution, mix, arrival); the first two are the CI gate
+CELLS = [
+    ("zipf", "update_heavy", "bursty"),
+    ("uniform", "read_heavy", "steady"),
+    ("zipf", "read_heavy", "steady"),
+    ("uniform", "update_heavy", "bursty"),
+    ("zipf", "range_mix", "steady"),
+]
+
+
+def emit(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.2f},{derived}", flush=True)
+
+
+# ------------------------------------------------------------- samplers
+def make_sampler(rng: np.random.Generator, dist: str):
+    """Key sampler: uniform over the domain, or zipfian over a random
+    hot set (rank r drawn with probability ~ r**-s via the generator's
+    alias table — no sorted-array descent here, the index layering gate
+    forbids it outside the core)."""
+    if dist == "uniform":
+        return lambda n: rng.integers(1, UNIVERSE, n).astype(np.int32)
+    ranks = np.arange(1, ZIPF_RANKS + 1, dtype=np.float64)
+    p = ranks ** -ZIPF_S
+    p /= p.sum()
+    hot = rng.permutation(UNIVERSE - 1)[:ZIPF_RANKS].astype(np.int32) + 1
+    return lambda n: hot[rng.choice(ZIPF_RANKS, size=n, p=p)]
+
+
+def gen_request(rng: np.random.Generator, mix: str, sample) -> OpBatch:
+    """One client request: 1-4 ops drawn from the mix."""
+    n = int(rng.integers(1, 5))
+    fi, fd, fs, fr = MIXES[mix]
+    r = rng.random(n)
+    keys = sample(n)
+    parts = []
+    for i in range(n):
+        k = int(keys[i])
+        if r[i] < fi:
+            parts.append(OpBatch.inserts([k], [k % 1000 + 1]))
+        elif r[i] < fi + fd:
+            parts.append(OpBatch.deletes([k]))
+        elif r[i] < fi + fd + fs:
+            parts.append(OpBatch.searches([k]))
+        else:
+            parts.append(OpBatch.ranges([k], [min(k + 64, UNIVERSE)]))
+    return OpBatch.concat(*parts)
+
+
+def warm_shapes(db: Uruv, max_w: int = 1024) -> None:
+    """Compile every pow2 plan-shape bucket on a scratch store copy, off
+    the clock.  CPU jit compile is seconds per shape; without this the
+    first cell's tail is compile time, not admission-pipeline behavior
+    (the jit cache is keyed on shapes, so the scratch copy warms it for
+    every same-shaped store)."""
+    scratch = Uruv.from_store(db.store)
+    w = 1
+    while w <= max_w:
+        plan = OpBatch.searches(np.arange(1, w + 1, dtype=np.int32))
+        scratch.apply(plan)
+        scratch.confirm(scratch.apply_nowait(plan))
+        w *= 2
+
+
+# -------------------------------------------------------------- prefill
+def prefill_store(rng: np.random.Generator) -> Uruv:
+    db = Uruv(UruvConfig(leaf_cap=64, max_leaves=1 << 12,
+                         max_versions=1 << 18, max_chain=64))
+    keys = rng.choice(UNIVERSE - 1, RESIDENT, replace=False) \
+        .astype(np.int32) + 1
+    for i in range(0, RESIDENT, 4096):
+        seg = keys[i:i + 4096]
+        db.apply(OpBatch.inserts(seg, seg % 1000 + 1))
+    return db
+
+
+# ---------------------------------------------------------- closed loop
+def run_pipelined(db: Uruv, requests: List[OpBatch], n_clients: int,
+                  bursty: bool) -> Tuple[np.ndarray, float]:
+    """Drive the coalescer closed-loop: each of ``n_clients`` keeps one
+    request outstanding.  Returns (per-op latencies [s], elapsed [s])."""
+    c = Coalescer(db, AdmissionPolicy())
+    lat: List[float] = []
+    pending: List = []
+    next_req = 0
+    idle = n_clients
+    burst = max(1, n_clients // 2)
+    t0 = time.monotonic()
+    while next_req < len(requests) or pending:
+        can_submit = next_req < len(requests) and idle > 0
+        if can_submit and (not bursty or idle >= burst or not pending):
+            while idle and next_req < len(requests):
+                pending.append(c.submit(requests[next_req]))
+                next_req += 1
+                idle -= 1
+        if not c.pump():
+            c.pump(force=True)
+        still = []
+        for f in pending:
+            if f.done:
+                lat.extend([f.done_t - f.submit_t] * f.n_ops)
+                idle += 1
+            else:
+                still.append(f)
+        pending = still
+    c.flush()
+    return np.asarray(lat), time.monotonic() - t0
+
+
+def run_sync(db: Uruv, requests: List[OpBatch]) -> Tuple[np.ndarray, float]:
+    """The per-request synchronous baseline: one ``Uruv.apply`` (one
+    host-synced device pass, at least) per client request."""
+    lat: List[float] = []
+    t0 = time.monotonic()
+    for req in requests:
+        s = time.monotonic()
+        db.apply(req, pad_to_pow2=True)
+        lat.extend([time.monotonic() - s] * len(req))
+    return np.asarray(lat), time.monotonic() - t0
+
+
+def run_burst(db: Uruv, depth: int) -> Tuple[float, Dict[str, int]]:
+    """Flood the admission queue ``depth`` requests deep, then drain —
+    the O(n)-queue regression harness (list.pop(0) made this quadratic)."""
+    c = Coalescer(db, AdmissionPolicy(max_width=1024))
+    rng = np.random.default_rng(11)
+    keys = rng.choice(UNIVERSE - 1, depth, replace=False) \
+        .astype(np.int32) + 1
+    t0 = time.monotonic()
+    futs = [c.submit(OpBatch.inserts([int(k)], [1])) for k in keys]
+    c.flush()
+    assert all(f.done for f in futs)
+    elapsed = time.monotonic() - t0
+    assert c.stats["max_queue_depth"] == depth, c.stats
+    return elapsed, dict(c.stats)
+
+
+# ------------------------------------------------------------------ main
+def bench_serve(quick: bool = False,
+                out_path: str = "BENCH_serve.json") -> None:
+    """Tail-latency + saturation-throughput matrix; writes BENCH_serve.json.
+
+    Gates (quick cells): the pipelined front end must sustain >= 2x the
+    synchronous per-request baseline's saturation throughput on both the
+    zipfian and the uniform CRUD cells, measured in the same run.
+    """
+    n_cells = 2 if quick else len(CELLS)
+    target_ops = 1500 if quick else 6000
+    n_clients = 32
+    report: Dict[str, Dict] = {"cells": {}, "quick": quick,
+                               "n_clients": n_clients,
+                               "target_ops_per_cell": target_ops}
+    gated: List[Tuple[str, float]] = []
+    seed_db = prefill_store(np.random.default_rng(7))
+    warm_shapes(seed_db)
+    for cell_i, (dist, mix, arrival) in enumerate(CELLS[:n_cells]):
+        name = f"{dist}_{mix}"
+        rng = np.random.default_rng([13, cell_i])
+        sample = make_sampler(rng, dist)
+        requests, ops = [], 0
+        while ops < target_ops:
+            req = gen_request(rng, mix, sample)
+            requests.append(req)
+            ops += len(req)
+
+        db_p = Uruv.from_store(seed_db.store)
+        lat_p, el_p = run_pipelined(db_p, requests, n_clients,
+                                    bursty=(arrival == "bursty"))
+        db_s = Uruv.from_store(seed_db.store)
+        lat_s, el_s = run_sync(db_s, requests)
+
+        thr_p = len(lat_p) / el_p
+        thr_s = len(lat_s) / el_s
+        speedup = thr_p / thr_s
+        p50, p95, p99 = np.percentile(lat_p * 1e6, [50, 95, 99])
+        s50, s95, s99 = np.percentile(lat_s * 1e6, [50, 95, 99])
+        report["cells"][name] = {
+            "arrival": arrival, "ops": int(len(lat_p)),
+            "pipelined": {"p50_us": round(float(p50), 1),
+                          "p95_us": round(float(p95), 1),
+                          "p99_us": round(float(p99), 1),
+                          "throughput_ops_s": round(thr_p, 1)},
+            "sync_baseline": {"p50_us": round(float(s50), 1),
+                              "p95_us": round(float(s95), 1),
+                              "p99_us": round(float(s99), 1),
+                              "throughput_ops_s": round(thr_s, 1)},
+            "throughput_speedup": round(speedup, 2),
+        }
+        emit(f"serve_{name}_p99", p99, f"{thr_p/1e3:.1f}Kops/s")
+        emit(f"serve_{name}_sync_p99", s99, f"{thr_s/1e3:.1f}Kops/s")
+        emit(f"serve_{name}_speedup", speedup, f"{speedup:.2f}x")
+        if mix != "range_mix":
+            gated.append((name, speedup))
+
+    depth = 10_000
+    db_b = Uruv.from_store(seed_db.store)
+    burst_s, burst_stats = run_burst(db_b, depth)
+    report["burst"] = {"depth": depth, "drain_s": round(burst_s, 3),
+                      "ops_s": round(depth / burst_s, 1),
+                      "plans": burst_stats["plans"]}
+    emit("serve_burst_10k_drain", burst_s * 1e6,
+         f"{depth/burst_s/1e3:.1f}Kops/s")
+
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+
+    for name, speedup in gated:
+        assert speedup >= 2.0, (
+            f"pipelined front end only {speedup:.2f}x sync baseline on "
+            f"{name} (gate: >= 2x saturation throughput)")
+
+
+if __name__ == "__main__":
+    bench_serve(quick=True)

@@ -25,6 +25,11 @@ workloads; see each section).  Figures:
                  under delta maintenance vs the flat full-rebuild
                  discipline (4k -> 64k leaves), and locate throughput at
                  depth 1 vs multi-level; writes BENCH_index.json.
+  * serve      — closed-loop tail-latency matrix for the pipelined
+                 admission front end (zipf/uniform x CRUD/range mixes,
+                 per-op p50/p95/p99 + saturation throughput vs the
+                 synchronous per-request baseline, 10k-deep burst
+                 drain); writes BENCH_serve.json.
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick]
 """
@@ -619,12 +624,22 @@ def roofline_summary() -> None:
              f"{r['bottleneck']}-bound;mfu={r['roofline_fraction_mfu']:.3f}")
 
 
+def serve_bench(quick: bool = False,
+                out_path: str = "BENCH_serve.json") -> None:
+    """Closed-loop serving-front-end matrix (DESIGN.md Sec 12): per-op
+    p50/p95/p99 tail latency and saturation throughput, pipelined
+    coalescer vs synchronous per-request baseline, plus the 10k-deep
+    burst drain.  Delegates to ``benchmarks.loadgen``; BENCH_serve.json."""
+    from benchmarks import loadgen
+    loadgen.bench_serve(quick=quick, out_path=out_path)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="fig8|fig9|complexity|kernels|mixed|range|"
-                         "lifecycle|index|roofline")
+                         "lifecycle|index|serve|roofline")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     sections = {
@@ -636,6 +651,7 @@ def main() -> None:
         "range": lambda: range_bench(args.quick),
         "lifecycle": lambda: lifecycle_bench(args.quick),
         "index": lambda: index_bench(args.quick),
+        "serve": lambda: serve_bench(args.quick),
         "roofline": roofline_summary,
     }
     if args.only:

@@ -56,6 +56,12 @@ python -m benchmarks.run --quick --only lifecycle
 echo "== index: delta maintenance vs flat full-rebuild + locate depth sweep (quick; writes BENCH_index.json) =="
 python -m benchmarks.run --quick --only index
 
+echo "== serve: pipelined front end tail latency vs sync baseline (quick; gates >=2x; writes BENCH_serve.json) =="
+python -m benchmarks.run --quick --only serve
+
+echo "== BENCH_serve.json =="
+cat BENCH_serve.json
+
 echo "== BENCH_index.json =="
 cat BENCH_index.json
 

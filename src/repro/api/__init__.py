@@ -35,7 +35,10 @@ from repro.core.store import UruvConfig
 
 from repro.api.client import Uruv
 from repro.api.executors import LocalExecutor, RangeOptions, ShardedExecutor
-from repro.api.opbatch import OpBatch, RangePage, Result, make_result
+from repro.api.futures import PendingPlan
+from repro.api.opbatch import (
+    OpBatch, RangePage, Result, make_result, pow2_width,
+)
 
 __all__ = [
     "CapacityError",
@@ -49,6 +52,7 @@ __all__ = [
     "OP_RANGE",
     "OP_SEARCH",
     "OpBatch",
+    "PendingPlan",
     "RangeOptions",
     "RangePage",
     "Result",
@@ -59,5 +63,6 @@ __all__ = [
     "UruvConfig",
     "get_backend",
     "make_result",
+    "pow2_width",
     "set_backend",
 ]

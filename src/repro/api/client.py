@@ -30,12 +30,15 @@ from typing import Iterator, List, Optional, Tuple
 import numpy as np
 
 from repro.core import store as _store
-from repro.core.ref import KEY_MAX
+from repro.core.ref import KEY_MAX, OP_RANGE
 
 from repro.api.executors import (
     LifecyclePolicy, LocalExecutor, RangeOptions, ShardedExecutor,
 )
-from repro.api.opbatch import OpBatch, RangePage, Result, make_result
+from repro.api.futures import PendingPlan
+from repro.api.opbatch import (
+    OpBatch, RangePage, Result, make_result, pow2_width,
+)
 
 
 class Uruv:
@@ -150,12 +153,78 @@ class Uruv:
         base = self.ts
         n = len(batch)
         if pad_to_pow2 and n:
-            batch = batch.pad_to(1 << (n - 1).bit_length())
+            batch = batch.pad_to(pow2_width(n))
         self._store, values, range_items = self.executor.apply(
             self._store, batch, light_path=light_path, range_opts=range_opts,
         )
         return make_result(values[:n], np.asarray(batch.codes)[:n], base,
                            range_items)
+
+    # ------------------------------------------------- pipelined (deferred)
+    def apply_nowait(self, batch: OpBatch, *, pad_to_pow2: bool = False,
+                     donate_store: bool = False) -> PendingPlan:
+        """Dispatch a CRUD-only plan WITHOUT waiting for the device.
+
+        Returns a :class:`PendingPlan` immediately — the device pass (and
+        its accept/reject decision) is still in flight; the client adopts
+        the speculative store so the next plan can be built and dispatched
+        behind it (the serving pipeline's two-plans-in-flight overlap,
+        DESIGN.md Sec 12).  Settle with :meth:`confirm` IN DISPATCH ORDER
+        before using any synchronous verb.  Plans with RANGE ops must take
+        :meth:`apply` (their pagination loop is host-driven).
+
+        ``donate_store=True`` additionally donates the store pools into
+        the pass — only for an exclusive owner (it invalidates every other
+        live reference to this client's store buffers, e.g. a
+        ``from_store`` donor), and only with at most one unconfirmed plan
+        in flight (a second speculative pass would consume the rejected
+        pass's rollback buffers).
+        """
+        n = len(batch)
+        if n == 0:
+            raise ValueError("apply_nowait requires a non-empty plan")
+        codes = np.asarray(batch.codes)
+        if bool((codes == OP_RANGE).any()):
+            raise ValueError(
+                "apply_nowait is CRUD-only; RANGE plans take apply()")
+        host = OpBatch(codes, np.asarray(batch.keys),
+                       np.asarray(batch.values))
+        if pad_to_pow2:
+            host = host.pad_to(pow2_width(n))
+        store_before = self._store
+        self._store, values, ok = self.executor.apply_nowait(
+            self._store, host, donate_store=donate_store,
+        )
+        return PendingPlan(
+            batch=host, n_user=n,
+            store_before=None if donate_store else store_before,
+            store_after=self._store, values=values, ok=ok,
+        )
+
+    def confirm(self, pending: PendingPlan) -> Optional[Result]:
+        """Settle one :meth:`apply_nowait` dispatch (the deferred host
+        sync).  On acceptance returns the plan's :class:`Result` (sliced
+        back to the caller's pre-padding width).  On rejection rolls the
+        client back to the pre-plan store and returns ``None`` — the
+        caller replays ``pending.batch`` (and every later unconfirmed
+        plan, whose speculative results are invalid) through :meth:`apply`,
+        which owns the slow-path and lifecycle machinery and re-derives
+        the exact same announce timestamps from the restored clock.
+        """
+        if not bool(np.asarray(pending.ok)):
+            self._store = pending.rollback_store()
+            return None
+        base = int(np.asarray(pending.store_after.ts)) - len(pending.batch)
+        values = np.asarray(pending.values)[:pending.n_user]
+        return make_result(values,
+                           np.asarray(pending.batch.codes)[:pending.n_user],
+                           base, ())
+
+    def lifecycle_tick(self) -> None:
+        """Run the policy's proactive grow/maintain triggers now.  The
+        pipelined front end calls this between plans (it reads occupancy,
+        i.e. syncs the host) instead of on the dispatch path."""
+        self._store = self.executor.lifecycle_tick(self._store)
 
     def insert(self, keys, values) -> Result:
         """Batched INSERT; ``Result.values`` holds the previous values."""
@@ -180,13 +249,22 @@ class Uruv:
         (KEY_MAX) return NOT_FOUND.  ``pad_to_pow2`` bounds jit retraces
         for ragged probe widths (reads are side-effect free, so padding
         costs nothing but the wider pass).
+
+        KEY_MAX stays the documented mask-out/padding encoding; the
+        internal pad sentinel KEY_MAX - 1 is rejected (a key the store
+        can publish but never find — the silent-loss guard of the
+        ``OpBatch`` builders, DESIGN.md Sec 12).
         """
         if snap_ts is None:
             snap_ts = self.ts
         keys = np.atleast_1d(np.asarray(keys, np.int32))
+        if keys.size and bool(np.any(keys == KEY_MAX - 1)):
+            raise ValueError(
+                f"lookup key {KEY_MAX - 1} is the internal pad sentinel "
+                f"(valid keys are < {KEY_MAX - 1}; KEY_MAX masks out)")
         n = len(keys)
         if pad_to_pow2 and n:
-            pad = (1 << (n - 1).bit_length()) - n
+            pad = pow2_width(n) - n
             keys = np.concatenate([keys, np.full(pad, KEY_MAX, np.int32)])
             snap = np.asarray(snap_ts, np.int32)
             if snap.ndim:            # per-op snaps pad too (padded keys are

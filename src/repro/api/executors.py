@@ -138,6 +138,29 @@ class LocalExecutor:
         range_items = [(pos, page, int(k2[pos])) for pos, page in range_pages]
         return store, values, range_items
 
+    def apply_nowait(self, store, batch: OpBatch, *,
+                     donate_store: bool = False):
+        """Dispatch ONE fast-path pass for a CRUD-only plan and return
+        ``(store, values, ok)`` with the result and accept flag still
+        device-resident — zero host syncs (the serving pipeline's deferred
+        ``block_until_ready``; DESIGN.md Sec 12).  ``donate_store``
+        donates the pools into the pass — the pipeline's in-place double
+        buffer, exclusive-owner mode only.  Rejection handling (slow
+        path, lifecycle) is the caller's, via ``Uruv.confirm`` + replay
+        through :meth:`apply`.
+        """
+        self.stats["device_passes"] += 1
+        return _store.bulk_apply(
+            store, jnp.asarray(batch.codes), jnp.asarray(batch.keys),
+            jnp.asarray(batch.values), backend=self.backend,
+            donate_store=donate_store,
+        )
+
+    def lifecycle_tick(self, store):
+        """Run the policy's proactive grow/maintain triggers now (the
+        serving pipeline calls this between plans, off the latency path)."""
+        return self._lifecycle_tick(store)
+
     # ------------------------------------------------------------------ read
     def lookup(self, store, keys, snap_ts):
         self.stats["device_passes"] += 1
@@ -385,6 +408,17 @@ class ShardedExecutor:
         k2 = np.asarray(batch.values)
         range_items = [(pos, page, int(k2[pos])) for pos, page in range_pages]
         return store, values, range_items
+
+    def apply_nowait(self, store, batch: OpBatch, *,
+                     donate_store: bool = False):
+        """Sharded passes route/collect on the host, so a deferred-sync
+        dispatch is not available; the coalescer detects this and falls
+        back to coalesced synchronous :meth:`apply` plans."""
+        raise NotImplementedError(
+            "apply_nowait is single-device only; use apply()")
+
+    def lifecycle_tick(self, store):
+        return self._lifecycle_tick(store)
 
     # ------------------------------------------------------------------ read
     def lookup(self, store, keys, snap_ts):

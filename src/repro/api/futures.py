@@ -1,0 +1,64 @@
+"""Deferred-result surface of the public API: `PendingPlan`.
+
+The serving front end (`repro.serve.coalescer`) overlaps host work with
+device execution: it dispatches plan N, then builds and routes plan N+1
+while the device is still executing N, and only *then* pays the first host
+sync for N.  The client primitive behind that is the ``apply_nowait`` /
+``confirm`` pair:
+
+  * ``Uruv.apply_nowait(batch)`` dispatches ONE fast-path device pass for a
+    CRUD-only plan and returns immediately with a :class:`PendingPlan` —
+    the speculative store, the device-resident result values, and the
+    device-resident accept flag.  No ``jax.block_until_ready`` /
+    ``np.asarray`` happens at dispatch; the client adopts the speculative
+    store so further plans can be dispatched behind it.
+  * ``Uruv.confirm(pending)`` is the deferred sync: it blocks on the accept
+    flag, and either materialises the per-op :class:`Result` (success) or
+    rolls the client back to the pre-plan store and returns ``None`` —
+    the caller then replays the plan through the synchronous ``apply``
+    path, which owns the slow-path/lifecycle machinery.
+
+Speculation is safe because ``store.bulk_apply`` rejects atomically: a
+rejected pass returns the input pools untouched (plus the ``oflow`` bits)
+and does not advance the clock, so the pre-plan state is always
+recoverable — from the host reference (``store_before``) normally, or from
+the passed-through reject store when the pass donated its input buffers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.opbatch import OpBatch
+
+
+@dataclasses.dataclass
+class PendingPlan:
+    """One dispatched-but-unconfirmed CRUD plan (see module docstring).
+
+    ``batch`` is the plan exactly as dispatched (padding included) with
+    host (numpy) leaves, so a rejected plan can be replayed bit-exactly.
+    ``n_user`` is the caller's pre-padding width — ``confirm`` slices the
+    materialised result back to it.  ``store_before`` is ``None`` when the
+    pass donated the store buffers (exclusive-owner mode); rollback then
+    recovers the pre-plan state from the atomically-rejected ``store_after``.
+    """
+
+    batch: OpBatch
+    n_user: int
+    store_before: Optional[Any]     # pre-dispatch store pytree (not donated)
+    store_after: Any                # speculative store pytree
+    values: jax.Array               # int32 [P] device result (speculative)
+    ok: jax.Array                   # bool [] device accept flag
+
+    def rollback_store(self):
+        """The pre-plan store: the held host reference, or the rejected
+        pass's passthrough pools with the overflow bits cleared."""
+        if self.store_before is not None:
+            return self.store_before
+        return dataclasses.replace(
+            self.store_after, oflow=jnp.zeros_like(self.store_after.oflow))

@@ -41,6 +41,30 @@ def _np1d(x) -> np.ndarray:
     return np.atleast_1d(np.asarray(x, np.int32))
 
 
+def pow2_width(n: int) -> int:
+    """The power-of-two shape bucket for a width-``n`` plan (>= 1)."""
+    return 1 << max(0, int(n) - 1).bit_length() if n else 1
+
+
+def check_keys(keys, what: str = "key") -> None:
+    """Front-door key-domain guard: reject the two sentinels.
+
+    ``KEY_MAX`` is the padding sentinel and ``KEY_MAX - 1`` the kernels'
+    internal pad value (valid keys are ``< KEY_MAX - 1``, ref.py).  The
+    store accepts either silently and then misbehaves — an INSERT at a
+    sentinel key is published but ``lookup`` never finds it — so the
+    builders and read verbs raise here, on the host, before any device
+    work.
+    """
+    k = np.asarray(keys)
+    if k.size and bool(np.any(k >= KEY_MAX - 1)):
+        bad = int(k[np.asarray(k >= KEY_MAX - 1)].flat[0])
+        raise ValueError(
+            f"{what} {bad} is in the sentinel range [KEY_MAX-1, KEY_MAX] "
+            f"(valid keys are < {KEY_MAX - 1}); the store would accept it "
+            "and then silently never find it")
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class OpBatch:
@@ -60,18 +84,21 @@ class OpBatch:
     def inserts(cls, keys, values) -> "OpBatch":
         """INSERT(keys[i], values[i]) for every i (values broadcastable)."""
         k = _np1d(keys)
+        check_keys(k, "INSERT key")
         v = np.broadcast_to(_np1d(values), k.shape).astype(np.int32)
         return cls(np.full(k.shape, OP_INSERT, np.int32), k, v.copy())
 
     @classmethod
     def deletes(cls, keys) -> "OpBatch":
         k = _np1d(keys)
+        check_keys(k, "DELETE key")
         return cls(np.full(k.shape, OP_DELETE, np.int32), k,
                    np.zeros(k.shape, np.int32))
 
     @classmethod
     def searches(cls, keys) -> "OpBatch":
         k = _np1d(keys)
+        check_keys(k, "SEARCH key")
         return cls(np.full(k.shape, OP_SEARCH, np.int32), k,
                    np.zeros(k.shape, np.int32))
 
@@ -79,14 +106,23 @@ class OpBatch:
     def ranges(cls, k1, k2) -> "OpBatch":
         """RANGEQUERY([k1[i], k2[i]]) — op i snapshots at its own timestamp."""
         a = _np1d(k1)
+        check_keys(a, "RANGE k1")
         b = np.broadcast_to(_np1d(k2), a.shape).astype(np.int32)
+        check_keys(b, "RANGE k2")
         return cls(np.full(a.shape, OP_RANGE, np.int32), a, b.copy())
 
     @classmethod
     def updates(cls, keys, values) -> "OpBatch":
         """Legacy (keys, values) update encoding: TOMBSTONE value -> DELETE,
-        KEY_MAX key -> NOP, otherwise INSERT (the pre-PR-1 announce shape)."""
+        KEY_MAX key -> NOP, otherwise INSERT (the pre-PR-1 announce shape).
+        KEY_MAX stays the documented NOP-padding encoding here; the
+        undocumented sentinel KEY_MAX - 1 is rejected like everywhere else.
+        """
         k = _np1d(keys)
+        if k.size and bool(np.any(k == KEY_MAX - 1)):
+            raise ValueError(
+                f"update key {KEY_MAX - 1} is the internal pad sentinel "
+                f"(valid keys are < {KEY_MAX - 1}; KEY_MAX pads to NOP)")
         v = np.broadcast_to(_np1d(values), k.shape).astype(np.int32)
         codes = np.where(
             k >= KEY_MAX, OP_NOP,
@@ -98,6 +134,8 @@ class OpBatch:
     def from_ops(cls, ops: Sequence[Tuple[int, int, int]]) -> "OpBatch":
         """From a list of (op_code, key, value) tuples (oracle encoding)."""
         arr = np.asarray(list(ops), np.int32).reshape(-1, 3)
+        check_keys(arr[:, 1][arr[:, 0] != OP_NOP], "key")
+        check_keys(arr[:, 2][arr[:, 0] == OP_RANGE], "RANGE k2")
         return cls(arr[:, 0].copy(), arr[:, 1].copy(), arr[:, 2].copy())
 
     @classmethod
@@ -133,6 +171,11 @@ class OpBatch:
             xp.concatenate([self.keys, xp.full((r,), KEY_MAX, xp.int32)]),
             xp.concatenate([self.values, xp.zeros((r,), xp.int32)]),
         )
+
+    def pad_to_pow2(self) -> "OpBatch":
+        """NOP-pad to the next power-of-two width (``pow2_width``): ragged
+        caller widths collapse to O(log max_width) jit shape buckets."""
+        return self.pad_to(pow2_width(len(self)))
 
     # ---------------------------------------------------------------- queries
     def __len__(self) -> int:

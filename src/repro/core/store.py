@@ -563,6 +563,24 @@ def _bulk_apply(store, op_codes, keys, values, base_ts, op_ts, next_ts, *,
                             next_ts, backend, light_path)
 
 
+# Store-donating twin of `_bulk_apply` for the pipelined serving front end
+# (repro.api.Uruv.apply_nowait / serve.coalescer, DESIGN.md Sec 12): the
+# pools double-buffer in place instead of allocating a fresh copy per pass.
+# Only the store is donated — every pool aliases a same-shape output, so
+# the donation is always usable; the small announce arrays are not (they
+# alias nothing and would just warn).  Donating the store is only safe for
+# an exclusive owner: rejection (`ok=False`) passes the pools through
+# untouched, so the pre-pass state remains recoverable from the RETURNED
+# store, but any OTHER live reference to the donated buffers (a
+# `from_store` donor, a held `db.store`) is invalidated.
+@functools.partial(jax.jit, static_argnames=("backend", "light_path"),
+                   donate_argnums=(0,))
+def _bulk_apply_dstore(store, op_codes, keys, values, base_ts, op_ts, next_ts,
+                       *, backend, light_path=True):
+    return _bulk_apply_impl(store, op_codes, keys, values, base_ts, op_ts,
+                            next_ts, backend, light_path)
+
+
 def bulk_apply(
     store: UruvStore,
     op_codes: jax.Array,
@@ -574,6 +592,7 @@ def bulk_apply(
     next_ts=None,
     backend: str | None = None,
     light_path: bool = True,
+    donate_store: bool = False,
 ) -> Tuple[UruvStore, jax.Array, jax.Array]:
     """Apply a mixed announce array in ONE jitted device pass.
 
@@ -603,8 +622,13 @@ def bulk_apply(
     through ``repro.core.batch.apply_batch`` (which segments the announce
     array and answers range ops via :func:`bulk_range`); an unrecognized
     code here degrades to NOP.
+
+    ``donate_store`` donates the store pools into the pass (the serving
+    pipeline's in-place double buffer) — see the donation-safety note on
+    ``_bulk_apply_dstore`` above.
     """
-    return _bulk_apply(
+    fn = _bulk_apply_dstore if donate_store else _bulk_apply
+    return fn(
         store,
         jnp.asarray(op_codes, jnp.int32),
         jnp.asarray(keys, jnp.int32),

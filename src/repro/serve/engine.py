@@ -20,8 +20,9 @@ archs also get one-shot prefill.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 import jax
@@ -31,13 +32,24 @@ from repro.api import OpBatch, Uruv, UruvConfig
 from repro.config import ArchConfig
 from repro.models import transformer
 from repro.models.registry import get_model
+from repro.serve.coalescer import AdmissionPolicy, Coalescer
 
 
 def prefix_hash(tokens) -> int:
+    """FNV-style rolling hash of a token prefix, clamped into the store's
+    key domain ``[1, 2**31 - 4]``.
+
+    The former ``& 0x7FFFFFFF`` mask could emit ``2**31 - 1`` (KEY_MAX,
+    the padding sentinel) and ``2**31 - 2`` (the kernels' internal pad
+    value): the store accepts an INSERT at either key and then ``lookup``
+    never finds it — the prefix entry is silently lost and that prefix is
+    never reused (and the front-door guards now reject it loudly).  The
+    modulus keeps every hash a valid, findable key.
+    """
     h = 2166136261
     for t in tokens:
         h = (h * 16777619 + int(t) + 1) & 0x7FFFFFFF
-    return int(h) or 1
+    return int(h) % (2**31 - 4) + 1
 
 
 @dataclasses.dataclass
@@ -63,7 +75,10 @@ class Engine:
         self.cache = self.api.init_cache(cfg, n_slots, max_len)
         self.lengths = np.zeros(n_slots, np.int32)
         self.slot_req: List[Optional[Request]] = [None] * n_slots
-        self.queue: List[Request] = []
+        # deque: admission pops from the head; a list's pop(0) is O(n)
+        # per admit — quadratic drain on a deep backlog (the tail-latency
+        # harness runs 10k-deep bursts through here)
+        self.queue: Deque[Request] = collections.deque()
         # The table starts SMALL and self-sizes: admission churn retires
         # prefix entries (tombstones + split-leavings) continuously, and
         # the client's lifecycle policy grows pools on pressure and
@@ -72,6 +87,11 @@ class Engine:
         # compaction pauses on the admission path (DESIGN.md Sec 10).
         self.table = Uruv(UruvConfig(
             leaf_cap=16, max_leaves=256, max_versions=1 << 12))
+        # table traffic goes through the pipelined admission layer: plans
+        # coalesce into pow2 buckets and dispatch without a host sync
+        # (DESIGN.md Sec 12); the engine blocks on a plan's future only
+        # when it needs the donor answer
+        self.coalescer = Coalescer(self.table, AdmissionPolicy())
         self._slot_keys: Dict[int, List[int]] = {i: [] for i in range(n_slots)}
         self._is_tf = cfg.family in ("dense", "moe", "vlm") and cfg.vlm is None
 
@@ -135,9 +155,10 @@ class Engine:
                          np.int32),
             ),
         )
-        # pad_to_pow2: admission widths vary per prompt; bucketed shapes
-        # keep the table's jitted pass at O(log width) compiles total
-        res = self.table.apply(plan, pad_to_pow2=True)
+        # the coalescer pow2-buckets the plan (admission widths vary per
+        # prompt) and pipelines the device pass; result() is the first
+        # host sync — the donor answer gates the KV copy
+        res = self.coalescer.submit(plan).result()
         self._slot_keys[slot] = list(pkeys)
         search_vals = res.values[len(old_keys):len(old_keys) + n]
         return self._select_donor(range(1, n + 1), search_vals)
@@ -153,7 +174,7 @@ class Engine:
         for slot in range(self.n_slots):
             if self.slot_req[slot] is not None or not self.queue:
                 continue
-            req = self.queue.pop(0)
+            req = self.queue.popleft()
             donor, plen = self._admission_pass(slot, req.prompt)
             if donor >= 0 and donor != slot and plen > 1 and self._is_tf:
                 self._copy_kv(slot, donor, plen)

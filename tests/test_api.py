@@ -130,6 +130,22 @@ def test_opbatch_builders_and_pad():
     assert mixed_plan().range_positions.tolist() == [5, 6]
 
 
+def test_pow2_width_and_pad_to_pow2():
+    """The serving front end's shape-bucketing helpers: `pow2_width` is
+    next-power-of-two (1 for empty), `pad_to_pow2` NOP-pads to it with
+    the KEY_MAX sentinel the builders themselves can never emit (they
+    reject both sentinel keys at the front door)."""
+    from repro.api import pow2_width
+    assert [pow2_width(n) for n in (0, 1, 2, 3, 4, 5, 8, 9)] == \
+        [1, 1, 2, 4, 4, 8, 8, 16]
+    b = OpBatch.inserts([1, 2, 3], [7, 7, 7]).pad_to_pow2()
+    assert len(b) == 4
+    assert b.codes.tolist()[-1] == OP_NOP and b.keys.tolist()[-1] == KEY_MAX
+    assert len(OpBatch.searches([1, 2]).pad_to_pow2()) == 2  # already pow2
+    with pytest.raises(ValueError, match="sentinel"):
+        OpBatch.inserts([KEY_MAX - 1], [1])
+
+
 # ---------------------------------------------------------------------------
 # One compile per shape through the client
 # ---------------------------------------------------------------------------
