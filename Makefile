@@ -1,8 +1,17 @@
-.PHONY: check test test-slow test-range api examples docs bench-kernels \
+.PHONY: check lint test test-slow test-range api examples docs bench-kernels \
 	bench-mixed bench-range bench-lifecycle bench-index bench-serve
 
 check:
 	bash scripts/check.sh
+
+# uruvlint: the repo's structural invariants as AST static analysis —
+# layering, @device_pass purity, donation safety, determinism, kernel
+# parity/VMEM, sentinel-literal confinement (DESIGN.md Sec 13).
+# `make lint FORMAT=json` emits the machine-diffable report.
+FORMAT ?= text
+lint:
+	PYTHONPATH=src python -m repro.analysis --format=$(FORMAT) \
+		src/repro benchmarks examples scripts
 
 test:
 	PYTHONPATH=src python -m pytest -x -q

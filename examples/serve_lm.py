@@ -12,6 +12,7 @@ import time
 
 import numpy as np
 
+from repro.api import KEY_DOMAIN_HI
 from repro.config import get_arch
 from repro.serve.engine import Engine, Request
 from repro.train.loop import TrainLoopConfig, train
@@ -49,7 +50,7 @@ def main():
     # the engine's prefix table IS a repro.api.Uruv client: read it through
     # the same front door — a registered snapshot + one batched range scan
     with eng.table.snapshot() as snap:
-        entries = eng.table.range(0, 2**31 - 3, snap)
+        entries = eng.table.range(0, KEY_DOMAIN_HI, snap)
     print(f"prefix-table entries: {len(entries)} "
           f"(table device passes: {eng.table.stats['device_passes']})")
 

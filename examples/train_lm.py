@@ -13,7 +13,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.api import UruvConfig
+from repro.api import KEY_DOMAIN_HI, UruvConfig
 from repro.config import get_arch
 from repro.data.pipeline import StreamingSampleStore
 from repro.train.loop import TrainLoopConfig, train
@@ -61,7 +61,7 @@ def main():
         ids = np.arange(i, i + 128, dtype=np.int32)
         store.ingest(ids, ids)
     with store.client.snapshot() as snap:
-        primed = len(store.client.range(0, 2**31 - 3, snap))
+        primed = len(store.client.range(0, KEY_DOMAIN_HI, snap))
     print(f"sample store primed with {primed} samples "
           f"(clock={store.client.ts})")
 

@@ -7,31 +7,13 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== api layering gate (non-core modules go through repro.api only) =="
-# import statements only (prose mentions of repro.core.* in docstrings are
-# fine): `from repro.core import store`, `from repro.core.store import ...`,
-# `import repro.core.store`
-if grep -RnE "^[[:space:]]*(from repro\.core import [^#]*\b(store|batch|sharded|lifecycle)\b|from repro\.core\.(store|batch|sharded|lifecycle)\b|import repro\.core\.(store|batch|sharded|lifecycle)\b)" \
-     --include="*.py" --exclude-dir=core --exclude-dir=api \
-     src/repro benchmarks examples scripts; then
-  echo "ERROR: module bypasses repro.api (import core internals directly)"
-  exit 1
-fi
-echo "ok"
-
-echo "== index layering gate (descent internals live in core/index.py + core/backend.py) =="
-# The flat-directory era is over: no module may touch dir_keys/dir_leaf or
-# run a searchsorted-style descent outside the index/backend pair (plus
-# their Pallas kernel twins under kernels/uruv_search and the deliberately
-# flat comparison baseline core/baseline.py).  Ordinal/rank access goes
-# through repro.core.index helpers; sanctioned non-descent searchsorted
-# uses go through index.rank().
-if grep -RnE "dir_keys|dir_leaf|searchsorted" --include="*.py" \
-     src/repro benchmarks examples scripts \
-   | grep -vE "src/repro/core/(index|backend|baseline)\.py|src/repro/kernels/uruv_search/"; then
-  echo "ERROR: flat-directory/descent access outside core/index.py + core/backend.py"
-  exit 1
-fi
+echo "== uruvlint (static analysis: layering, device-pass purity, donation"
+echo "   safety, determinism, kernel parity/VMEM, sentinel literals) =="
+# Replaces the former api/index grep gates with AST analysis (resolves
+# relative imports, never trips on docstring prose) and adds the purity /
+# donation / determinism / kernel / sentinel rules on top.  Rule catalog +
+# suppression syntax: DESIGN.md Sec 13.  `make lint` runs the same stage.
+python -m repro.analysis src/repro benchmarks examples scripts
 echo "ok"
 
 echo "== tier-1 tests (slow-marked growth batteries excluded via pytest.ini) =="

@@ -1,0 +1,34 @@
+"""repro.analysis — uruvlint, the repo's structural-invariant prover.
+
+Every headline claim (one-device-pass CRUD, bit-exact sharded == local
+timestamps, zero-host-sync pipelined serving) is a *structural* property
+of the source; this package checks those properties by AST analysis
+instead of runtime luck or grep gates:
+
+  * ``python -m repro.analysis src/``       lint (exit 1 on findings)
+  * ``python -m repro.analysis --format=json``  machine-diffable report
+  * ``@repro.analysis.device_pass``         mark a jitted hot path whose
+    body must stay free of host syncs (the purity rule's registry)
+
+Rule catalog, suppression syntax (``# uruvlint: disable=<rule>``) and
+the how-to-add-a-rule recipe: DESIGN.md Sec 13.  Only :mod:`marks` is
+imported eagerly so that ``repro.core`` can register device passes
+without pulling the linter into the hot-path import graph; the engine
+loads on first attribute access.
+"""
+
+from repro.analysis.marks import DEVICE_PASS_REGISTRY, device_pass
+
+__all__ = [
+    "DEVICE_PASS_REGISTRY",
+    "device_pass",
+    "run_paths",
+]
+
+
+def __getattr__(name):
+    if name == "run_paths":
+        from repro.analysis.engine import run_paths
+
+        return run_paths
+    raise AttributeError(name)

@@ -1,0 +1,69 @@
+"""uruvlint CLI: ``python -m repro.analysis [paths...]``.
+
+Exit code 1 iff any error-severity finding survives inline suppressions
+and the tracked allowlist — scripts/check.sh runs this before the test
+tiers, so a layering / purity / donation / sentinel regression fails CI
+before a single test executes (DESIGN.md Sec 13).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.analysis.engine import Allowlist, load_contexts, run_contexts
+from repro.analysis.reporters import exit_code, render_json, render_text
+from repro.analysis.rules import DEFAULT_VMEM_BUDGET, default_rules
+
+DEFAULT_PATHS = ("src/repro", "benchmarks", "examples", "scripts")
+DEFAULT_ALLOWLIST = Path("scripts/uruvlint_allow.txt")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="uruvlint: prove Uruv's structural invariants "
+                    "(layering, device-pass purity, donation safety, "
+                    "determinism, kernel checks) by static analysis.")
+    ap.add_argument("paths", nargs="*", help="files or directories "
+                    f"(default: {' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--select", help="comma-separated rule ids to run")
+    ap.add_argument("--disable", help="comma-separated rule ids to skip")
+    ap.add_argument("--allowlist", type=Path, default=None,
+                    help=f"tracked deferral file (default: "
+                         f"{DEFAULT_ALLOWLIST} when present)")
+    ap.add_argument("--vmem-budget", type=int, default=DEFAULT_VMEM_BUDGET,
+                    help="kernel-vmem byte budget per pallas_call")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    rules = default_rules(vmem_budget=args.vmem_budget)
+    if args.list_rules:
+        for r in rules:
+            print(f"{r.id:20s} {' '.join(r.description.split())}")
+        return 0
+    if args.select:
+        keep = {s.strip() for s in args.select.split(",")}
+        rules = [r for r in rules if r.id in keep]
+    if args.disable:
+        drop = {s.strip() for s in args.disable.split(",")}
+        rules = [r for r in rules if r.id not in drop]
+
+    paths = args.paths or [p for p in DEFAULT_PATHS if Path(p).exists()]
+    allow = None
+    allow_path = args.allowlist or (
+        DEFAULT_ALLOWLIST if DEFAULT_ALLOWLIST.exists() else None)
+    if allow_path is not None and allow_path.exists():
+        allow = Allowlist.load(allow_path)
+
+    ctxs, errors = load_contexts(paths)
+    findings = errors + run_contexts(ctxs, rules, allow)
+    render = render_json if args.format == "json" else render_text
+    print(render(findings, len(ctxs)))
+    return exit_code(findings)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

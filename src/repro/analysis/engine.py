@@ -1,0 +1,226 @@
+"""uruvlint rule engine: AST visitor core, suppressions, the driver.
+
+The engine is deliberately small: a :class:`Rule` produces
+:class:`Finding`\\ s from parsed :class:`FileContext`\\ s; the driver
+collects ``*.py`` files, applies every registered rule, and filters the
+result through inline suppressions (``# uruvlint: disable=<rule>`` on
+the finding's line, ``# uruvlint: disable-file=<rule>`` anywhere in the
+file) and an optional tracked allowlist (``scripts/uruvlint_allow.txt``:
+one ``<rule-id> <path-glob>`` pair per line).
+
+Rules come in two kinds: per-file (``check_file``) and project-wide
+(``check_project``, for cross-file invariants like kernel/ref signature
+parity).  The catalog lives in ``repro.analysis.rules``; adding a rule
+is subclassing :class:`Rule` and appending to ``ALL_RULES``
+(DESIGN.md Sec 13).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import fnmatch
+import io
+import re
+import tokenize
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+ERROR = "error"
+WARNING = "warning"
+
+_SUPPRESS = re.compile(r"uruvlint:\s*disable(?P<file>-file)?=(?P<rules>[\w\-, ]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation, anchored to a source line."""
+
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+    severity: str = ERROR
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: "
+                f"{self.rule} [{self.severity}] {self.message}")
+
+
+class FileContext:
+    """One parsed source file plus its suppression map.
+
+    ``posix`` is the path the layering/scoping helpers match against —
+    repo-relative with forward slashes (fixture tests pass synthetic
+    paths like ``src/repro/serve/x.py``).
+    """
+
+    def __init__(self, path: str, source: str):
+        self.posix = path.replace("\\", "/")
+        self.source = source
+        self.tree = ast.parse(source)
+        # line -> suppressed rule ids ("all" wildcards the line)
+        self.line_suppressed: Dict[int, Set[str]] = {}
+        self.file_suppressed: Set[str] = set()
+        self._parse_suppressions()
+
+    def _parse_suppressions(self) -> None:
+        try:
+            toks = tokenize.generate_tokens(io.StringIO(self.source).readline)
+            for tok in toks:
+                if tok.type != tokenize.COMMENT:
+                    continue
+                m = _SUPPRESS.search(tok.string)
+                if not m:
+                    continue
+                rules = {r.strip() for r in m.group("rules").split(",")
+                         if r.strip()}
+                if m.group("file"):
+                    self.file_suppressed |= rules
+                else:
+                    self.line_suppressed.setdefault(
+                        tok.start[0], set()).update(rules)
+        except tokenize.TokenError:
+            pass
+
+    def suppressed(self, finding: Finding) -> bool:
+        if {finding.rule, "all"} & self.file_suppressed:
+            return True
+        line = self.line_suppressed.get(finding.line, set())
+        return bool({finding.rule, "all"} & line)
+
+    def in_dir(self, *fragments: str) -> bool:
+        """True when the file lives under any ``fragment`` (a posix path
+        fragment like ``repro/core``), anchored at a path boundary."""
+        p = "/" + self.posix
+        return any(f"/{frag.strip('/')}/" in p for frag in fragments)
+
+    def is_file(self, *names: str) -> bool:
+        p = "/" + self.posix
+        return any(p.endswith("/" + n) for n in names)
+
+    def module_name(self) -> str:
+        """Dotted module path inferred from the file path (best effort:
+        everything from the last ``repro`` segment on; used to resolve
+        relative imports)."""
+        parts = self.posix.split("/")
+        if "repro" in parts:
+            parts = parts[parts.index("repro"):]
+        if parts[-1].endswith(".py"):
+            parts[-1] = parts[-1][:-3]
+        if parts[-1] == "__init__":
+            parts = parts[:-1]
+        return ".".join(parts)
+
+
+class Rule:
+    """Base rule: subclass, set ``id``/``description``, implement
+    ``check_file`` (per file) and/or ``check_project`` (cross-file)."""
+
+    id: str = "abstract"
+    severity: str = ERROR
+    description: str = ""
+
+    def check_file(self, ctx: FileContext) -> Iterable[Finding]:
+        return ()
+
+    def check_project(self, ctxs: Sequence[FileContext]) -> Iterable[Finding]:
+        return ()
+
+
+class Allowlist:
+    """Tracked deferrals: ``<rule-id> <path-glob>`` per line, ``#``
+    comments.  Ships EMPTY (scripts/uruvlint_allow.txt) — an entry is a
+    debt with its justification in the comment above it."""
+
+    def __init__(self, entries: Sequence[Tuple[str, str]] = ()):
+        self.entries = list(entries)
+
+    @classmethod
+    def load(cls, path: Path) -> "Allowlist":
+        entries = []
+        for raw in path.read_text().splitlines():
+            line = raw.split("#", 1)[0].strip()
+            if not line:
+                continue
+            rule, _, glob = line.partition(" ")
+            entries.append((rule.strip(), glob.strip() or "*"))
+        return cls(entries)
+
+    def allows(self, finding: Finding) -> bool:
+        return any(
+            rule in (finding.rule, "all")
+            and fnmatch.fnmatch(finding.path, glob)
+            for rule, glob in self.entries
+        )
+
+
+def collect_files(paths: Sequence, root: Optional[Path] = None) -> List[Path]:
+    files: List[Path] = []
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            files.append(p)
+    return [f for f in files if "__pycache__" not in f.parts]
+
+
+def load_contexts(paths: Sequence, root: Optional[Path] = None,
+                  ) -> Tuple[List[FileContext], List[Finding]]:
+    """Parse every file; unparsable files become findings, not crashes."""
+    ctxs: List[FileContext] = []
+    errors: List[Finding] = []
+    for f in collect_files(paths):
+        rel = f
+        if root is not None:
+            try:
+                rel = f.resolve().relative_to(Path(root).resolve())
+            except ValueError:
+                rel = f
+        try:
+            ctxs.append(FileContext(str(rel), f.read_text()))
+        except SyntaxError as e:
+            errors.append(Finding("parse-error", str(rel), e.lineno or 0,
+                                  e.offset or 0, f"syntax error: {e.msg}"))
+    return ctxs, errors
+
+
+def run_contexts(ctxs: Sequence[FileContext],
+                 rules: Sequence[Rule],
+                 allowlist: Optional[Allowlist] = None) -> List[Finding]:
+    by_path = {c.posix: c for c in ctxs}
+    findings: List[Finding] = []
+    for rule in rules:
+        for ctx in ctxs:
+            findings.extend(rule.check_file(ctx))
+        findings.extend(rule.check_project(list(ctxs)))
+    out = []
+    seen = set()
+    for f in findings:
+        key = (f.rule, f.path, f.line, f.col, f.message)
+        if key in seen:
+            continue
+        seen.add(key)
+        ctx = by_path.get(f.path)
+        if ctx is not None and ctx.suppressed(f):
+            continue
+        if allowlist is not None and allowlist.allows(f):
+            continue
+        out.append(f)
+    out.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return out
+
+
+def run_paths(paths: Sequence, rules: Optional[Sequence[Rule]] = None,
+              allowlist: Optional[Allowlist] = None,
+              root: Optional[Path] = None) -> List[Finding]:
+    """Lint ``paths`` (files or directories) and return the surviving
+    findings — the programmatic twin of ``python -m repro.analysis``."""
+    if rules is None:
+        from repro.analysis.rules import default_rules
+
+        rules = default_rules()
+    ctxs, errors = load_contexts(paths, root=root)
+    return errors + run_contexts(ctxs, rules, allowlist)

@@ -1,0 +1,49 @@
+"""Dependency-free source markers consumed by uruvlint (`repro.analysis`).
+
+``@device_pass`` declares a function to be a DEVICE PASS: a jitted hot
+path in which a host synchronization (``.item()``, ``int()/float()/
+bool()`` on array values, ``np.asarray``, ``block_until_ready``, a
+Python ``if`` on a traced value) would silently serialize the pipeline —
+the structural property behind the repo's one-device-pass and
+zero-host-sync claims (DESIGN.md Sec 3 / Sec 12 / Sec 13).
+
+The decorator is an identity at runtime apart from recording the
+function in :data:`DEVICE_PASS_REGISTRY`; the real enforcement is
+static — uruvlint's ``device-pass-purity`` rule recognizes the
+decorator syntactically and checks the decorated body.
+
+``static=(...)`` names the parameters that are jit-static (backend
+selectors, python bools baked into the trace): Python control flow on a
+static parameter is fine and is not flagged.
+
+This module imports nothing so that ``repro.core`` (and the kernels) can
+depend on it without pulling the linter — or anything else — into the
+hot-path import graph.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+# qualified name ("module.qualname") -> names of jit-static parameters
+DEVICE_PASS_REGISTRY: Dict[str, Tuple[str, ...]] = {}
+
+
+def device_pass(fn: Optional[Callable] = None, *,
+                static: Tuple[str, ...] = ()):
+    """Mark ``fn`` as a device pass (registration contract: DESIGN.md
+    Sec 13).  Usable bare (``@device_pass``) or with static parameter
+    names (``@device_pass(static=("backend",))``); always returns the
+    function unchanged."""
+
+    def mark(f: Callable) -> Callable:
+        key = "%s.%s" % (
+            getattr(f, "__module__", "?"),
+            getattr(f, "__qualname__", getattr(f, "__name__", "?")),
+        )
+        DEVICE_PASS_REGISTRY[key] = tuple(static)
+        return f
+
+    if fn is None:
+        return mark
+    return mark(fn)

@@ -1,0 +1,51 @@
+"""uruvlint reporters: human text and machine-diffable JSON.
+
+The JSON shape is stable so future PRs can diff finding counts:
+
+    {"version": 1, "files": N, "counts": {"<rule>": n, ...},
+     "findings": [{"rule", "path", "line", "col", "severity",
+                   "message"}, ...]}
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Sequence
+
+from repro.analysis.engine import ERROR, Finding
+
+
+def counts_by_rule(findings: Sequence[Finding]) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for f in findings:
+        out[f.rule] = out.get(f.rule, 0) + 1
+    return dict(sorted(out.items()))
+
+
+def render_text(findings: Sequence[Finding], n_files: int) -> str:
+    lines: List[str] = [f.render() for f in findings]
+    if findings:
+        per_rule = ", ".join(f"{r}={n}"
+                             for r, n in counts_by_rule(findings).items())
+        lines.append(f"uruvlint: {len(findings)} finding(s) in "
+                     f"{n_files} file(s) [{per_rule}]")
+    else:
+        lines.append(f"uruvlint: clean ({n_files} file(s))")
+    return "\n".join(lines)
+
+
+def render_json(findings: Sequence[Finding], n_files: int) -> str:
+    return json.dumps({
+        "version": 1,
+        "files": n_files,
+        "counts": counts_by_rule(findings),
+        "findings": [
+            {"rule": f.rule, "path": f.path, "line": f.line, "col": f.col,
+             "severity": f.severity, "message": f.message}
+            for f in findings
+        ],
+    }, indent=2)
+
+
+def exit_code(findings: Sequence[Finding]) -> int:
+    return 1 if any(f.severity == ERROR for f in findings) else 0

@@ -27,7 +27,7 @@ from repro.core.backend import get_backend, set_backend
 from repro.core.batch import CapacityError
 from repro.core.lifecycle import LifecyclePolicy
 from repro.core.ref import (
-    KEY_MAX, NOT_FOUND, TOMBSTONE,
+    KEY_DOMAIN_HI, KEY_MAX, NOT_FOUND, TOMBSTONE,
     OP_DELETE, OP_INSERT, OP_NOP, OP_RANGE, OP_SEARCH,
 )
 from repro.core.sharded import ShardedConfig
@@ -42,6 +42,7 @@ from repro.api.opbatch import (
 
 __all__ = [
     "CapacityError",
+    "KEY_DOMAIN_HI",
     "KEY_MAX",
     "LifecyclePolicy",
     "LocalExecutor",

@@ -29,6 +29,7 @@ from typing import Iterator, List, Optional, Tuple
 
 import numpy as np
 
+from repro.analysis.marks import device_pass
 from repro.core import store as _store
 from repro.core.ref import KEY_MAX, OP_RANGE
 
@@ -161,6 +162,7 @@ class Uruv:
                            range_items)
 
     # ------------------------------------------------- pipelined (deferred)
+    @device_pass(static=("pad_to_pow2", "donate_store"))
     def apply_nowait(self, batch: OpBatch, *, pad_to_pow2: bool = False,
                      donate_store: bool = False) -> PendingPlan:
         """Dispatch a CRUD-only plan WITHOUT waiting for the device.
@@ -183,12 +185,15 @@ class Uruv:
         n = len(batch)
         if n == 0:
             raise ValueError("apply_nowait requires a non-empty plan")
-        codes = np.asarray(batch.codes)
-        if bool((codes == OP_RANGE).any()):
+        # plan marshalling is host-side BY DESIGN: OpBatch arrays are
+        # numpy before dispatch, so these never sync the device
+        codes = np.asarray(batch.codes)  # uruvlint: disable=device-pass-purity
+        if bool((codes == OP_RANGE).any()):  # uruvlint: disable=device-pass-purity
             raise ValueError(
                 "apply_nowait is CRUD-only; RANGE plans take apply()")
-        host = OpBatch(codes, np.asarray(batch.keys),
-                       np.asarray(batch.values))
+        host = OpBatch(codes,  # uruvlint: disable=device-pass-purity
+                       np.asarray(batch.keys),  # uruvlint: disable=device-pass-purity
+                       np.asarray(batch.values))  # uruvlint: disable=device-pass-purity
         if pad_to_pow2:
             host = host.pad_to(pow2_width(n))
         store_before = self._store

@@ -37,6 +37,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.marks import device_pass
 from repro.core import batch as _batch
 from repro.core import lifecycle as _lifecycle
 from repro.core import sharded as _sharded
@@ -138,6 +139,7 @@ class LocalExecutor:
         range_items = [(pos, page, int(k2[pos])) for pos, page in range_pages]
         return store, values, range_items
 
+    @device_pass(static=("donate_store",))
     def apply_nowait(self, store, batch: OpBatch, *,
                      donate_store: bool = False):
         """Dispatch ONE fast-path pass for a CRUD-only plan and return

@@ -30,7 +30,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 import jax
 
-from repro.api import Uruv, UruvConfig
+from repro.api import KEY_DOMAIN_HI, Uruv, UruvConfig
 
 
 def _flatten(tree) -> List[Tuple[str, Any]]:
@@ -100,7 +100,7 @@ class CheckpointManager:
     def latest_step(self) -> Optional[int]:
         self.wait()
         with self.index.snapshot() as snap:
-            items = self.index.range(0, 2**31 - 3, snap)
+            items = self.index.range(0, KEY_DOMAIN_HI, snap)
         steps = [k for k, v in items if v == 1]
         return max(steps) if steps else None
 
@@ -179,7 +179,7 @@ class CheckpointManager:
     # -------------------------------------------------------------------- gc
     def _gc(self) -> None:
         with self.index.snapshot() as snap:
-            items = self.index.range(0, 2**31 - 3, snap)
+            items = self.index.range(0, KEY_DOMAIN_HI, snap)
         steps = sorted(k for k, v in items if v == 1)
         drop = steps[: -self.keep] if self.keep else []
         if drop:

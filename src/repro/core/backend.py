@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.analysis.marks import device_pass
 from repro.core.ref import KEY_MAX, NOT_FOUND, TOMBSTONE
 
 XLA = "xla"
@@ -69,6 +70,7 @@ def get_backend() -> str:
 # slot (+ vhead gather).  DESIGN.md Sec 11.
 # ---------------------------------------------------------------------------
 
+@device_pass(static=("backend",))
 def descend(index, queries, *, backend: str):
     """Root->leaf blocked F-way descent over ``repro.core.index``.
 
@@ -87,6 +89,7 @@ def descend(index, queries, *, backend: str):
     )
 
 
+@device_pass(static=("backend",))
 def locate(index, leaf_keys, leaf_vhead, queries, *, backend: str):
     """Full traversal: returns (bnode, bslot, leaf_id, slot, exists,
     vhead).  ``(bnode, bslot)`` is the bottom index entry covering the
@@ -121,6 +124,7 @@ def locate(index, leaf_keys, leaf_vhead, queries, *, backend: str):
 # resolve: first version with ts <= snap (the paper's read()/vCAS path)
 # ---------------------------------------------------------------------------
 
+@device_pass(static=("max_chain", "backend"))
 def resolve(vhead, snap_ts, ver_ts, ver_next, ver_value, *, max_chain: int,
             backend: str):
     """Versioned read over the chain pool; snap_ts broadcasts to vhead."""
@@ -158,6 +162,7 @@ def resolve(vhead, snap_ts, ver_ts, ver_next, ver_value, *, max_chain: int,
 # (the candidate phase of store.bulk_range; paper Sec 3.4)
 # ---------------------------------------------------------------------------
 
+@device_pass(static=("max_chain", "backend"))
 def range_scan(lids, pvalid, k1, k2, snap_ts, leaf_keys, leaf_vhead,
                leaf_count, ver_ts, ver_next, ver_value, *, max_chain: int,
                backend: str):

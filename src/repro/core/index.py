@@ -53,11 +53,13 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.analysis.marks import device_pass
 from repro.core.ref import KEY_MAX
 
 KEY_MIN = -(2**31)      # left sentinel: separator of the leftmost leaf
 
-_I32MAX = 2**31 - 1     # ord_start padding (keeps searchsorted monotone)
+_I32MAX = KEY_MAX       # int32 max — ord_start padding (keeps searchsorted
+                        # monotone); spelled via the blessed sentinel module
 
 
 def pow2ceil(n: int) -> int:
@@ -222,6 +224,7 @@ def build(cfg: IndexConfig, max_leaves: int, sep_keys: jax.Array,
 # Descent (XLA formulation; the Pallas twin lives in kernels/uruv_search)
 # ---------------------------------------------------------------------------
 
+@device_pass
 def descend(idx: UruvIndex, queries: jax.Array):
     """Root->leaf blocked F-way descent.  Returns (bnode, bslot, leaf):
     the bottom (node, slot) of the last separator <= q, and its leaf."""
@@ -229,6 +232,7 @@ def descend(idx: UruvIndex, queries: jax.Array):
     return bnode, bslot, leaf
 
 
+@device_pass
 def descend_path(idx: UruvIndex, queries: jax.Array):
     """Full descent path: (nodes[D, P], slots[D, P]) with level 0 first
     (nodes[0] == bottom node).  XLA-only — the structural delta uses it
@@ -237,6 +241,7 @@ def descend_path(idx: UruvIndex, queries: jax.Array):
     return nodes, slots
 
 
+@device_pass
 def _descend_full(idx: UruvIndex, queries: jax.Array):
     F, D = idx.cfg.fanout, idx.cfg.depth
     i32 = jnp.int32
@@ -271,12 +276,14 @@ def leaf_ordinal(idx: UruvIndex, bnode: jax.Array,
     return idx.ord_start[jnp.maximum(pos, 0)] + bslot
 
 
+@device_pass
 def rank_right(idx: UruvIndex, queries: jax.Array) -> jax.Array:
     """# separators <= q — the old searchsorted(dir_keys, q, 'right')."""
     bnode, bslot, _ = descend(idx, queries)
     return leaf_ordinal(idx, bnode, bslot) + 1
 
 
+@device_pass
 def ord_locate(idx: UruvIndex, p: jax.Array):
     """Leaf ordinal -> (bottom node, slot).  Caller masks p outside
     [0, n_leaves) — out-of-range ordinals return clamped garbage."""
@@ -290,18 +297,21 @@ def ord_locate(idx: UruvIndex, p: jax.Array):
     return jnp.maximum(node, 0), jnp.clip(slot, 0, idx.cfg.fanout - 1)
 
 
+@device_pass
 def leaf_at(idx: UruvIndex, p: jax.Array) -> jax.Array:
     """Leaf id at ordinal p (the old dir_leaf[p]); caller masks range."""
     node, slot = ord_locate(idx, p)
     return idx.node_child[0][node, slot]
 
 
+@device_pass
 def sep_at(idx: UruvIndex, p: jax.Array) -> jax.Array:
     """Separator key at ordinal p (the old dir_keys[p]); caller masks."""
     node, slot = ord_locate(idx, p)
     return idx.node_keys[0][node, slot]
 
 
+@device_pass(static=("side",))
 def rank(a: jax.Array, v: jax.Array, *, side: str = "right") -> jax.Array:
     """Generic sorted-array rank (int32).  The ONE sanctioned searchsorted
     for non-index arrays (worklist offsets, hit cumsums) — keeps the
@@ -460,6 +470,7 @@ def _maybe_insert_level(keys_l, child_l, cnt_l, it_node, it_key, it_child,
          it_valid))
 
 
+@device_pass
 def apply_split_delta(idx: UruvIndex, valid: jax.Array, gkey: jax.Array,
                       old_leaf: jax.Array, left_id: jax.Array,
                       right_id: jax.Array, rkey: jax.Array):
@@ -592,6 +603,7 @@ def merge_deletable(idx: UruvIndex, ord_del: jax.Array) -> jax.Array:
     return slot >= 1
 
 
+@device_pass
 def apply_merge_delta(idx: UruvIndex, ord_del: jax.Array, lb: jax.Array,
                       valid: jax.Array) -> UruvIndex:
     """Delete the separators at ordinals ``ord_del`` (the right members of
@@ -653,6 +665,7 @@ def apply_merge_delta(idx: UruvIndex, ord_del: jax.Array, lb: jax.Array,
     )
 
 
+@device_pass
 def retarget_leaves(idx: UruvIndex, src: jax.Array, dst: jax.Array,
                     valid: jax.Array) -> UruvIndex:
     """Point the bottom entries of relocated leaves at their new ids

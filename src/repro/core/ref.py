@@ -24,8 +24,13 @@ import bisect
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-# Sentinels (shared with the JAX store; see repro.core.store).
+# Sentinels (shared with the JAX store; see repro.core.store).  This is
+# the ONE module allowed to spell the key-sentinel family as literals —
+# everywhere else imports the names (uruvlint rule `sentinel-literal`,
+# DESIGN.md Sec 13): KEY_MAX masks out / pads, KEY_MAX - 1 is the
+# kernels' internal pad sentinel, and user keys end at KEY_DOMAIN_HI.
 KEY_MAX = 2**31 - 1          # padding sentinel — valid keys are < KEY_MAX - 1
+KEY_DOMAIN_HI = KEY_MAX - 2  # largest user-visible key (2**31 - 3)
 TOMBSTONE = -(2**31) + 1     # paper's tombstone value
 NOT_FOUND = -1               # paper: SEARCH returns -1 when absent
 

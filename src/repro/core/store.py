@@ -50,6 +50,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.analysis.marks import device_pass
 from repro.core import backend as _B
 from repro.core import index as _I
 from repro.core.ref import (
@@ -162,6 +163,7 @@ def create(cfg: UruvConfig = UruvConfig()) -> UruvStore:
 # contract; ``backend`` must be static at every call site.
 # ---------------------------------------------------------------------------
 
+@device_pass(static=("backend",))
 def _locate(store: UruvStore, keys: jax.Array, backend: str = _B.XLA):
     """Vectorized root->leaf traversal.
 
@@ -175,6 +177,7 @@ def _locate(store: UruvStore, keys: jax.Array, backend: str = _B.XLA):
     )
 
 
+@device_pass(static=("backend",))
 def _resolve(
     store: UruvStore, vhead: jax.Array, snap_ts: jax.Array,
     backend: str = _B.XLA,
@@ -194,6 +197,7 @@ def _resolve(
 # SEARCH (batched)
 # ---------------------------------------------------------------------------
 
+@device_pass(static=("backend",))
 @functools.partial(jax.jit, static_argnames=("backend",))
 def _bulk_lookup(store, keys, snap_ts, *, backend):
     snap_ts = jnp.broadcast_to(jnp.asarray(snap_ts, jnp.int32), keys.shape)
@@ -226,6 +230,7 @@ def bulk_lookup(
 # scan (Kogan-Petrank helping).
 # ---------------------------------------------------------------------------
 
+@device_pass(static=("backend", "light_path"))
 def _bulk_apply_impl(store, op_codes, keys, values, base_ts, op_ts, next_ts,
                      backend, light_path=True):
     cfg = store.cfg
@@ -556,6 +561,7 @@ def _bulk_apply_impl(store, op_codes, keys, values, base_ts, op_ts, next_ts,
     return new_store, results, ok
 
 
+@device_pass(static=("backend", "light_path"))
 @functools.partial(jax.jit, static_argnames=("backend", "light_path"))
 def _bulk_apply(store, op_codes, keys, values, base_ts, op_ts, next_ts, *,
                 backend, light_path=True):
@@ -573,6 +579,7 @@ def _bulk_apply(store, op_codes, keys, values, base_ts, op_ts, next_ts, *,
 # untouched, so the pre-pass state remains recoverable from the RETURNED
 # store, but any OTHER live reference to the donated buffers (a
 # `from_store` donor, a held `db.store`) is invalidated.
+@device_pass(static=("backend", "light_path"))
 @functools.partial(jax.jit, static_argnames=("backend", "light_path"),
                    donate_argnums=(0,))
 def _bulk_apply_dstore(store, op_codes, keys, values, base_ts, op_ts, next_ts,
@@ -696,6 +703,7 @@ def _cummax(x: jax.Array) -> jax.Array:
 # RANGEQUERY
 # ---------------------------------------------------------------------------
 
+@device_pass(static=("max_scan_leaves", "max_results", "backend"))
 @functools.partial(
     jax.jit, static_argnames=("max_scan_leaves", "max_results", "backend")
 )
@@ -792,6 +800,7 @@ def range_query(
 # worklist is fused in repro.kernels.uruv_range.
 # ---------------------------------------------------------------------------
 
+@device_pass(static=("max_results", "scan_leaves", "max_rounds", "backend"))
 @functools.partial(
     jax.jit,
     static_argnames=("max_results", "scan_leaves", "max_rounds", "backend"),
@@ -944,6 +953,7 @@ def bulk_range(
 # Snapshots + version tracker (paper Appendix E)
 # ---------------------------------------------------------------------------
 
+@device_pass
 @jax.jit
 def snapshot(store: UruvStore) -> Tuple[UruvStore, jax.Array]:
     """RANGEQUERY LP: read the clock, register in the tracker ring.
@@ -975,6 +985,7 @@ def snapshot(store: UruvStore) -> Tuple[UruvStore, jax.Array]:
     return new, snap
 
 
+@device_pass
 @jax.jit
 def release(store: UruvStore, snap_ts: jax.Array) -> UruvStore:
     match = store.trk_active & (store.trk_ts == snap_ts)
@@ -987,6 +998,7 @@ def release(store: UruvStore, snap_ts: jax.Array) -> UruvStore:
     return dataclasses.replace(store, trk_active=trk_active)
 
 
+@device_pass
 @jax.jit
 def min_active_ts(store: UruvStore) -> jax.Array:
     return jnp.min(jnp.where(store.trk_active, store.trk_ts, store.ts))
@@ -999,6 +1011,7 @@ def min_active_ts(store: UruvStore) -> jax.Array:
 # active snapshot can read, drop dead keys, rebuild perfectly packed leaves.
 # ---------------------------------------------------------------------------
 
+@device_pass
 @jax.jit
 def compact(store: UruvStore) -> Tuple[UruvStore, jax.Array]:
     """Rebuild the store, reclaiming versions below min_active_ts.

@@ -18,7 +18,7 @@ from typing import Dict, Iterator, List, Optional, Tuple
 import numpy as np
 import jax.numpy as jnp
 
-from repro.api import OpBatch, Uruv, UruvConfig
+from repro.api import KEY_DOMAIN_HI, OpBatch, Uruv, UruvConfig
 from repro.config import ArchConfig
 
 
@@ -140,7 +140,7 @@ class StreamingSampleStore:
 
     def live_count(self) -> int:
         with self.client.snapshot() as snap:
-            return len(self.read_shard(0, 2**31 - 3, snap))
+            return len(self.read_shard(0, KEY_DOMAIN_HI, snap))
 
 
 def epoch_iterator(
@@ -155,7 +155,7 @@ def epoch_iterator(
     """Consume a consistent epoch of the sample store shard-by-shard."""
     snap = store.epoch_view()
     try:
-        items = store.read_shard(0, 2**31 - 3, snap)
+        items = store.read_shard(0, KEY_DOMAIN_HI, snap)
         mine = [off for sid, off in items if sid % n_shards == shard]
         for i in range(0, len(mine) - B + 1, B):
             offs = mine[i : i + B]

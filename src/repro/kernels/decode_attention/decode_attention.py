@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.analysis.marks import device_pass
+
 NEG_INF = -1e30
 
 
@@ -77,6 +79,7 @@ def _decode_kernel(
         l_out_ref[0, 0] = l_ref[...]
 
 
+@device_pass(static=("block_k", "interpret", "return_stats"))
 @functools.partial(
     jax.jit, static_argnames=("block_k", "interpret", "return_stats")
 )

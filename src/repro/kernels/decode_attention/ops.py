@@ -9,7 +9,10 @@ import jax
 from repro.kernels.decode_attention.decode_attention import decode_attention
 from repro.kernels.decode_attention.ref import decode_attention_ref
 
+from repro.analysis.marks import device_pass
 
+
+@device_pass(static=("use_pallas", "interpret", "block_k"))
 @functools.partial(
     jax.jit, static_argnames=("use_pallas", "interpret", "block_k")
 )

@@ -32,6 +32,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.analysis.marks import device_pass
+
 NEG_INF = -1e30
 
 
@@ -95,6 +97,7 @@ def _flash_kernel(
         o_ref[0, 0] = (acc_ref[...] / safe).astype(o_ref.dtype)
 
 
+@device_pass(static=("causal", "window", "block_q", "block_k", "interpret"))
 @functools.partial(
     jax.jit,
     static_argnames=("causal", "window", "block_q", "block_k", "interpret"),

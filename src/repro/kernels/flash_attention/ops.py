@@ -6,10 +6,13 @@ import functools
 
 import jax
 
+from repro.analysis.marks import device_pass
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 
 
+@device_pass(static=("causal", "window", "use_pallas", "interpret",
+                     "block_q", "block_k"))
 @functools.partial(
     jax.jit,
     static_argnames=("causal", "window", "use_pallas", "interpret",

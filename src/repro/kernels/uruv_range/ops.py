@@ -17,7 +17,10 @@ import jax
 from repro.kernels.uruv_range.ref import range_scan_ref
 from repro.kernels.uruv_range.uruv_range import range_scan as range_scan_pallas
 
+from repro.analysis.marks import device_pass
 
+
+@device_pass(static=("max_chain", "block_q", "use_pallas", "interpret"))
 @functools.partial(
     jax.jit, static_argnames=("max_chain", "block_q", "use_pallas", "interpret")
 )

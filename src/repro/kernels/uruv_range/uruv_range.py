@@ -31,6 +31,8 @@ from jax.experimental import pallas as pl
 
 from repro.core.ref import KEY_MAX, NOT_FOUND, TOMBSTONE
 
+from repro.analysis.marks import device_pass
+
 
 def _range_kernel(
     lids_ref, pvalid_ref, k1_ref, k2_ref, snap_ref,
@@ -73,6 +75,7 @@ def _range_kernel(
         ovals_ref[:, s * L:(s + 1) * L] = jnp.where(hit, val, NOT_FOUND)
 
 
+@device_pass(static=("max_chain", "block_q", "interpret"))
 @functools.partial(
     jax.jit, static_argnames=("max_chain", "block_q", "interpret")
 )

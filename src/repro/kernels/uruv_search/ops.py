@@ -18,7 +18,10 @@ import jax.numpy as jnp
 from repro.kernels.uruv_search.uruv_search import index_descend, leaf_slots
 from repro.kernels.uruv_search.ref import index_descend_ref, leaf_slots_ref
 
+from repro.analysis.marks import device_pass
 
+
+@device_pass(static=("use_pallas", "interpret"))
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
 def locate(
     level_keys,            # tuple l=0..D-1 of int32 [C_l, F] (bottom first)

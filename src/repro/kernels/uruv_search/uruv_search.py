@@ -31,6 +31,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.ref import KEY_MAX
 
+from repro.analysis.marks import device_pass
+
 
 def _search_kernel(dir_ref, q_ref, pos_ref, acc_ref):
     j = pl.program_id(1)
@@ -51,6 +53,7 @@ def _search_kernel(dir_ref, q_ref, pos_ref, acc_ref):
         pos_ref[...] = acc_ref[...] - 1
 
 
+@device_pass(static=("block_q", "block_dir", "interpret"))
 @functools.partial(
     jax.jit, static_argnames=("block_q", "block_dir", "interpret")
 )
@@ -118,6 +121,7 @@ def _index_descend_kernel(q_ref, *refs, depth):
     leaf_ref[...] = nxt
 
 
+@device_pass(static=("block_q", "interpret"))
 @functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
 def index_descend(
     level_keys,            # tuple l=0..D-1 of int32 [C_l, F]
@@ -163,6 +167,7 @@ def _slot_kernel(rows_ref, q_ref, slot_ref, exists_ref):
     exists_ref[...] = ((slot < L) & (hit == q)).astype(jnp.int32)
 
 
+@device_pass(static=("block_q", "interpret"))
 @functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
 def leaf_slots(
     rows: jax.Array,

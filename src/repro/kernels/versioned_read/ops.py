@@ -9,7 +9,10 @@ import jax
 from repro.kernels.versioned_read.versioned_read import versioned_read
 from repro.kernels.versioned_read.ref import versioned_read_ref
 
+from repro.analysis.marks import device_pass
 
+
+@device_pass(static=("max_chain", "use_pallas", "interpret"))
 @functools.partial(
     jax.jit, static_argnames=("max_chain", "use_pallas", "interpret")
 )

@@ -25,6 +25,8 @@ from jax.experimental import pallas as pl
 
 from repro.core.ref import NOT_FOUND, TOMBSTONE
 
+from repro.analysis.marks import device_pass
+
 
 def _vread_kernel(vh_ref, snap_ref, ts_ref, nxt_ref, val_ref, out_ref, *, max_chain):
     cur = vh_ref[...]                       # [BQ]
@@ -43,6 +45,7 @@ def _vread_kernel(vh_ref, snap_ref, ts_ref, nxt_ref, val_ref, out_ref, *, max_ch
     out_ref[...] = jnp.where(val == TOMBSTONE, NOT_FOUND, val)
 
 
+@device_pass(static=("max_chain", "block_q", "interpret"))
 @functools.partial(
     jax.jit, static_argnames=("max_chain", "block_q", "interpret")
 )

@@ -50,6 +50,7 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.analysis.marks import device_pass
 from repro.api import OP_NOP, OpBatch, Result, Uruv
 
 
@@ -243,6 +244,7 @@ class Coalescer:
         return take
 
     # -------------------------------------------------------------- dispatch
+    @device_pass(static=("reqs",))  # reqs is host metadata (futures + spans)
     def _dispatch(self, reqs: List[_Queued]) -> None:
         spans: List[Tuple[OpFuture, int, int]] = []
         at = 0
@@ -252,7 +254,9 @@ class Coalescer:
         plan = OpBatch.concat(*[q.plan for q in reqs]).pad_to_pow2()
         self.stats["plans"] += 1
         self.stats["padded_ops"] += len(plan) - at
-        self._note_skew(np.asarray(plan.keys), np.asarray(plan.codes))
+        # plan arrays are host numpy (built by OpBatch on the host);
+        # probing them costs no device sync
+        self._note_skew(np.asarray(plan.keys), np.asarray(plan.codes))  # uruvlint: disable=device-pass-purity
         if self.dispatch_log is not None:
             self.dispatch_log.append((plan, spans))
         if not (any(q.has_range for q in reqs) or not self._pipelined):

@@ -28,7 +28,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.api import OpBatch, Uruv, UruvConfig
+from repro.api import KEY_DOMAIN_HI, KEY_MAX, OpBatch, Uruv, UruvConfig
 from repro.config import ArchConfig
 from repro.models import transformer
 from repro.models.registry import get_model
@@ -37,19 +37,19 @@ from repro.serve.coalescer import AdmissionPolicy, Coalescer
 
 def prefix_hash(tokens) -> int:
     """FNV-style rolling hash of a token prefix, clamped into the store's
-    key domain ``[1, 2**31 - 4]``.
+    key domain ``[1, KEY_DOMAIN_HI - 1]``.
 
-    The former ``& 0x7FFFFFFF`` mask could emit ``2**31 - 1`` (KEY_MAX,
-    the padding sentinel) and ``2**31 - 2`` (the kernels' internal pad
-    value): the store accepts an INSERT at either key and then ``lookup``
-    never finds it — the prefix entry is silently lost and that prefix is
+    The former ``& 0x7FFFFFFF`` mask could emit KEY_MAX (the padding
+    sentinel) and KEY_MAX - 1 (the kernels' internal pad value): the
+    store accepts an INSERT at either key and then ``lookup`` never
+    finds it — the prefix entry is silently lost and that prefix is
     never reused (and the front-door guards now reject it loudly).  The
     modulus keeps every hash a valid, findable key.
     """
     h = 2166136261
     for t in tokens:
-        h = (h * 16777619 + int(t) + 1) & 0x7FFFFFFF
-    return int(h) % (2**31 - 4) + 1
+        h = (h * 16777619 + int(t) + 1) & KEY_MAX
+    return int(h) % (KEY_DOMAIN_HI - 1) + 1
 
 
 @dataclasses.dataclass
@@ -259,7 +259,7 @@ class Engine:
     # no host round-trip per page), at a registered snapshot so concurrent
     # admissions/completions never perturb the view.
     def snapshot_view(self) -> List[Tuple[int, int]]:
-        return self.snapshot_views([(0, 2**31 - 3)])[0]
+        return self.snapshot_views([(0, KEY_DOMAIN_HI)])[0]
 
     def snapshot_views(self, bounds: List[Tuple[int, int]]
                        ) -> List[List[Tuple[int, int]]]:

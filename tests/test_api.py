@@ -7,7 +7,6 @@ the layering gate (non-core modules go through repro.api only), and
 sharded-executor equivalence on 4 fake devices (subprocess).
 """
 
-import re
 import subprocess
 import sys
 import warnings
@@ -356,35 +355,25 @@ def test_internal_layers_raise_no_deprecation_warnings():
 
 # ---------------------------------------------------------------------------
 # Layering gate: outside repro.core (and repro.api, which implements the
-# facade), nothing imports core.store / core.batch / core.sharded
+# facade), nothing imports core.store / core.batch / core.sharded — proven
+# by uruvlint's AST import analysis (repro.analysis, DESIGN.md Sec 13),
+# which replaced the old regex scan: it resolves relative imports and never
+# trips on prose mentions in docstrings.
 # ---------------------------------------------------------------------------
 
 def test_layering_only_api_touches_core_internals():
+    from repro.analysis.engine import run_paths
+    from repro.analysis.rules import LayeringApiRule, LayeringIndexRule
+
     root = Path(__file__).resolve().parents[1]
-    # import statements only — prose references to repro.core.* in
-    # comments/docstrings must not trip the gate
-    pat = re.compile(
-        r"^\s*(?:from\s+repro\.core\s+import\s+[^\n]*\b(?:store|batch|sharded)\b"
-        r"|from\s+repro\.core\.(?:store|batch|sharded)\b"
-        r"|import\s+repro\.core\.(?:store|batch|sharded)\b)",
-        re.M,
-    )
     scan_dirs = [
         root / "src" / "repro", root / "benchmarks", root / "examples",
         root / "scripts",
     ]
-    allowed = {root / "src" / "repro" / "core",
-               root / "src" / "repro" / "api"}
-    offenders = []
-    for d in scan_dirs:
-        for py in d.rglob("*.py"):
-            if any(a in py.parents for a in allowed):
-                continue
-            if pat.search(py.read_text()):
-                offenders.append(str(py.relative_to(root)))
-    assert not offenders, (
-        f"modules bypassing repro.api: {offenders}"
-    )
+    findings = run_paths(
+        scan_dirs, rules=[LayeringApiRule(), LayeringIndexRule()], root=root)
+    assert not findings, "layering violations:\n" + "\n".join(
+        f.render() for f in findings)
 
 
 # ---------------------------------------------------------------------------
