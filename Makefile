@@ -1,5 +1,5 @@
 .PHONY: check lint test test-slow test-range api examples docs bench-kernels \
-	bench-mixed bench-range bench-lifecycle bench-index bench-serve
+	bench-mixed bench-range bench-lifecycle bench-index bench-serve bench-wal
 
 check:
 	bash scripts/check.sh
@@ -16,7 +16,8 @@ lint:
 test:
 	PYTHONPATH=src python -m pytest -x -q
 
-# the slow-marked large-pool growth batteries (excluded from tier-1)
+# the slow-marked batteries excluded from tier-1: large-pool growth and
+# the full kill -9 crash-recovery sweep (tests/test_wal_recovery.py)
 test-slow:
 	PYTHONPATH=src python -m pytest -x -q -m slow
 
@@ -58,6 +59,12 @@ bench-index:
 # synchronous per-request baseline); writes BENCH_serve.json
 bench-serve:
 	PYTHONPATH=src python -m benchmarks.run --quick --only serve
+
+# durability: group-commit WAL ingest vs fsync-per-plan, delta vs full
+# checkpoint bytes (gate: delta <= 25% of full), crash-recovery replay
+# throughput (gate: >= 50k ops/s); writes BENCH_wal.json
+bench-wal:
+	PYTHONPATH=src python -m benchmarks.run --quick --only wal
 
 # extract + run every fenced ```python block in README.md / DESIGN.md
 # under URUV_BACKEND=pallas_interpret (docs can never rot)

@@ -30,6 +30,10 @@ workloads; see each section).  Figures:
                  per-op p50/p95/p99 + saturation throughput vs the
                  synchronous per-request baseline, 10k-deep burst
                  drain); writes BENCH_serve.json.
+  * wal        — durability: group-commit WAL ingest vs fsync-per-plan,
+                 delta vs full checkpoint bytes + latency, and crash-
+                 recovery replay throughput (gated: delta <= 25% of the
+                 full save, replay >= 50k ops/s); writes BENCH_wal.json.
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick]
 """
@@ -634,12 +638,171 @@ def serve_bench(quick: bool = False,
     loadgen.bench_serve(quick=quick, out_path=out_path)
 
 
+WAL_CFG = UruvConfig(leaf_cap=32, max_leaves=1 << 10, max_versions=1 << 16,
+                     max_chain=64)
+WAL_WIDTH = 1024
+WAL_RESIDENT = 8192
+
+
+def _du(path) -> int:
+    return sum(f.stat().st_size for f in Path(path).rglob("*") if f.is_file())
+
+
+def wal_bench(quick: bool = False, out_path: str = "BENCH_wal.json") -> None:
+    """Durability costs (DESIGN.md Sec 14); BENCH_wal.json.
+
+    Workload: a resident working set (prefilled + checkpointed), then the
+    serving-table traffic pattern from the ``mixed`` bench — 90% SEARCH /
+    5% INSERT / 5% DELETE over live keys — as the WAL tail.
+
+    (a) *Group commit vs fsync-per-plan*: the same traffic through a
+    durable client with ``group_commit=1`` (every confirmed plan is
+    fsynced before its result is released) vs ``group_commit=16`` (one
+    fsync amortizes a window of plans; the coalescer's ``flush`` closes
+    it).  A volatile client runs alongside so the WAL overhead itself is
+    visible.
+
+    (b) *Delta vs full checkpoint* after a small dirty batch: full save of
+    the resident store, ONE narrow update plan, then a delta save — bytes
+    on disk and save latency.  GATED: the delta must be <= 25% of the full
+    save's bytes (the version-tail fast path + per-leaf row diffs are the
+    whole point of the delta chain).
+
+    (c) *Recovery*: reopen the ``group_commit=1`` directory from (a) —
+    checkpoint restore + WAL-tail replay at the recorded timestamps.  The
+    restore cost is isolated by also recovering a copy of the directory
+    taken before the tail was written, so the replay rate is
+    (tail ops) / (total - restore).  GATED: >= 50k replayed ops/s on CPU.
+    """
+    import shutil
+    import tempfile
+    import time as _time
+
+    rng = np.random.default_rng(17)
+    n_traffic = 12 if quick else 24
+    manual = LifecyclePolicy(auto_grow=True, auto_maintain=False)
+    resident = np.arange(WAL_RESIDENT, dtype=np.int32)
+    prefill = [OpBatch.updates(resident[i:i + WAL_WIDTH],
+                               resident[i:i + WAL_WIDTH] % 997 + 1)
+               for i in range(0, WAL_RESIDENT, WAL_WIDTH)]
+    traffic = []
+    for _ in range(n_traffic):
+        r = rng.random(WAL_WIDTH)
+        codes = np.where(r < 0.90, OP_SEARCH,
+                         np.where(r < 0.95, OP_INSERT, OP_DELETE),
+                         ).astype(np.int32)
+        keys = rng.integers(0, WAL_RESIDENT, WAL_WIDTH).astype(np.int32)
+        traffic.append(OpBatch(codes, keys, (keys % 997 + 1).astype(np.int32)))
+    report = {}
+    root = Path(tempfile.mkdtemp(prefix="uruv_wal_bench_"))
+    try:
+        # ---- (a) group-commit throughput vs fsync-per-plan --------------
+        def ingest(tag, gc):
+            db = Uruv(WAL_CFG, policy=manual,
+                      **({} if gc is None else
+                         {"durable_dir": str(root / tag), "group_commit": gc}))
+            for p in prefill:
+                db.apply(p)
+            if gc is not None:
+                db.checkpoint()              # prune prefill: WAL = tail only
+            if tag == "gc1":                 # restore-only baseline for (c)
+                shutil.copytree(root / tag, root / "restore_base")
+            t0 = _time.perf_counter()
+            for p in traffic:
+                db.apply(p)
+            if gc is not None:
+                db.sync_durable()            # close the group-commit window
+            sec = _time.perf_counter() - t0
+            if gc is not None:
+                db.durability.close()
+            return sec, db
+
+        ingest("warmup", None)               # compiles every pass shape
+        v_sec, _ = ingest("volatile", None)
+        s_sec, _ = ingest("gc1", 1)
+        g_sec, _ = ingest("gc16", 16)
+        for tag, sec in (("volatile", v_sec), ("fsync_per_plan", s_sec),
+                         ("group_commit16", g_sec)):
+            emit(f"wal_ingest_{tag}", sec / n_traffic * 1e6,
+                 f"{n_traffic * WAL_WIDTH / sec / 1e6:.3f}Mops/s")
+        emit("wal_group_commit_speedup", s_sec / g_sec,
+             f"{s_sec / g_sec:.2f}x")
+        report["group_commit"] = {
+            "plans": n_traffic, "width": WAL_WIDTH,
+            "volatile_us_per_plan": round(v_sec / n_traffic * 1e6, 1),
+            "fsync_per_plan_us": round(s_sec / n_traffic * 1e6, 1),
+            "group_commit16_us_per_plan": round(g_sec / n_traffic * 1e6, 1),
+            "speedup_vs_fsync_per_plan": round(s_sec / g_sec, 2),
+        }
+
+        # ---- (b) delta vs full checkpoint bytes + latency ---------------
+        db = Uruv(WAL_CFG, durable_dir=str(root / "delta"), policy=manual)
+        for p in prefill:
+            db.apply(p)
+        t0 = _time.perf_counter()
+        db.checkpoint()                      # first save is always full
+        full_sec = _time.perf_counter() - t0
+        full_step = db.durability.ckpt.latest_step()
+        full_bytes = _du(root / "delta" / "ckpt" / f"step_{full_step:08d}")
+
+        dirty = rng.choice(resident, 256, replace=False).astype(np.int32)
+        db.apply(OpBatch.updates(dirty, dirty % 31 + 1))   # small dirty batch
+        t0 = _time.perf_counter()
+        db.checkpoint(delta=True)
+        delta_sec = _time.perf_counter() - t0
+        delta_step = db.durability.ckpt.latest_step()
+        delta_bytes = _du(root / "delta" / "ckpt" / f"step_{delta_step:08d}")
+        db.durability.close()
+        frac = delta_bytes / full_bytes
+        emit("wal_ckpt_full", full_sec * 1e6, f"{full_bytes}B")
+        emit("wal_ckpt_delta", delta_sec * 1e6, f"{delta_bytes}B")
+        emit("wal_ckpt_delta_fraction", frac * 100, f"{frac:.3f}of_full")
+        assert frac <= 0.25, \
+            f"delta checkpoint is {frac:.1%} of the full save (gate: <=25%)"
+        report["checkpoint"] = {
+            "full_bytes": full_bytes, "full_us": round(full_sec * 1e6, 1),
+            "delta_bytes": delta_bytes, "delta_us": round(delta_sec * 1e6, 1),
+            "delta_fraction_of_full": round(frac, 4),
+        }
+
+        # ---- (c) recovery: checkpoint restore + WAL-tail replay ----------
+        t0 = _time.perf_counter()
+        db_b = Uruv.recover(str(root / "restore_base"), policy=manual)
+        base_sec = _time.perf_counter() - t0
+        assert db_b.recovery.replayed_plans == 0, db_b.recovery
+        db_b.durability.close()
+        t0 = _time.perf_counter()
+        db_r = Uruv.recover(str(root / "gc1"), policy=manual)
+        total_sec = _time.perf_counter() - t0
+        assert db_r.recovery.replayed_plans == n_traffic, db_r.recovery
+        db_r.durability.close()
+        ops = n_traffic * WAL_WIDTH
+        replay_sec = max(total_sec - base_sec, 1e-9)
+        ops_s = ops / replay_sec
+        emit("wal_recovery_restore", base_sec * 1e6, "0replayed")
+        emit("wal_recovery_total", total_sec * 1e6, f"{n_traffic}plans")
+        emit("wal_recovery_replay", replay_sec * 1e6,
+             f"{ops_s / 1e3:.1f}Kops/s")
+        assert ops_s >= 50_000, \
+            f"recovery replayed {ops_s:.0f} ops/s (gate: >=50k ops/s)"
+        report["recovery"] = {
+            "restore_us": round(base_sec * 1e6, 1),
+            "total_us": round(total_sec * 1e6, 1),
+            "replayed_plans": n_traffic,
+            "replayed_ops": ops,
+            "replay_ops_per_s": round(ops_s),
+        }
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    Path(out_path).write_text(json.dumps(report, indent=2) + "\n")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="fig8|fig9|complexity|kernels|mixed|range|"
-                         "lifecycle|index|serve|roofline")
+                         "lifecycle|index|serve|wal|roofline")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     sections = {
@@ -652,6 +815,7 @@ def main() -> None:
         "lifecycle": lambda: lifecycle_bench(args.quick),
         "index": lambda: index_bench(args.quick),
         "serve": lambda: serve_bench(args.quick),
+        "wal": lambda: wal_bench(args.quick),
         "roofline": roofline_summary,
     }
     if args.only:

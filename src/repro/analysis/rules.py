@@ -453,7 +453,7 @@ class DonationSafetyRule(Rule):
 # 5. determinism — no wall clock / host RNG in the op_ts plumbing
 # ---------------------------------------------------------------------------
 
-DETERMINISM_SCOPE = ("repro/core",)
+DETERMINISM_SCOPE = ("repro/core", "repro/durability")
 NONDET_MODULES = ("time", "random", "secrets", "uuid")
 
 
@@ -461,9 +461,11 @@ class DeterminismRule(Rule):
     id = "determinism"
     description = (
         "bit-exact sharded == local timestamps are a gated invariant: "
-        "core modules (the op_ts plumbing and sharded apply paths) must "
-        "not read the wall clock, host RNGs (random.*, np.random.*), or "
-        "iterate sets (jax.random with explicit keys is fine)")
+        "core modules (the op_ts plumbing and sharded apply paths) and "
+        "the durability package (crash recovery replays the WAL at its "
+        "recorded timestamps) must not read the wall clock, host RNGs "
+        "(random.*, np.random.*, os.urandom), or iterate sets "
+        "(jax.random with explicit keys is fine)")
 
     def check_file(self, ctx: FileContext) -> Iterable[Finding]:
         if not ctx.in_dir(*DETERMINISM_SCOPE):
@@ -486,6 +488,10 @@ class DeterminismRule(Rule):
                 elif (root in ("np", "numpy") and node.attr == "random"):
                     yield self._finding(ctx, node, f"{root}.random",
                                         "use of")
+                elif root == "os" and node.attr == "urandom":
+                    # os is legitimate in durability (fsync, rename, kill)
+                    # — only its entropy source is a replay hazard
+                    yield self._finding(ctx, node, "os.urandom", "use of")
             elif isinstance(node, (ast.For, ast.comprehension)):
                 it = node.iter
                 if isinstance(it, ast.Set) or (

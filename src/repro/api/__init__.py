@@ -25,7 +25,9 @@ of this API.
 
 from repro.core.backend import get_backend, set_backend
 from repro.core.batch import CapacityError
-from repro.core.lifecycle import LifecyclePolicy
+from repro.core.lifecycle import (
+    LifecyclePolicy, PoolWatermarks, pool_watermarks, version_tail_start,
+)
 from repro.core.ref import (
     KEY_DOMAIN_HI, KEY_MAX, NOT_FOUND, TOMBSTONE,
     OP_DELETE, OP_INSERT, OP_NOP, OP_RANGE, OP_SEARCH,
@@ -45,6 +47,9 @@ __all__ = [
     "KEY_DOMAIN_HI",
     "KEY_MAX",
     "LifecyclePolicy",
+    "PoolWatermarks",
+    "pool_watermarks",
+    "version_tail_start",
     "LocalExecutor",
     "NOT_FOUND",
     "OP_DELETE",

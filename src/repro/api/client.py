@@ -58,11 +58,23 @@ class Uruv:
 
     def __init__(self, config: Optional[_store.UruvConfig] = None, *,
                  executor=None, store=None, backend: Optional[str] = None,
-                 policy: Optional[LifecyclePolicy] = None):
+                 policy: Optional[LifecyclePolicy] = None,
+                 durable_dir: Optional[str] = None, group_commit: int = 1):
         if executor is None:
             executor = LocalExecutor(config, backend=backend, policy=policy)
         self.executor = executor
         self._store = store if store is not None else executor.create()
+        self.recovery = None       # set by Uruv.recover()
+        if durable_dir is not None:
+            from repro.durability.recovery import Durability
+
+            dur = Durability(durable_dir, group_commit=group_commit)
+            if dur.has_history:
+                raise ValueError(
+                    f"{durable_dir} already holds durable history; a fresh "
+                    "client would fork it — use Uruv.recover()")
+            dur.write_config(self.config)
+            self._attach_durability(dur)
 
     # ----------------------------------------------------------- constructors
     @classmethod
@@ -84,6 +96,51 @@ class Uruv:
         return cls(executor=LocalExecutor(store.cfg, backend=backend,
                                           policy=policy),
                    store=store)
+
+    @classmethod
+    def recover(cls, durable_dir: str, *, backend: Optional[str] = None,
+                policy: Optional[LifecyclePolicy] = None,
+                group_commit: int = 1) -> "Uruv":
+        """Rebuild a ``durable_dir=...`` client after a crash: restore the
+        newest complete checkpoint (full or delta chain), replay the WAL
+        tail at its recorded timestamps — bit-identical values AND version
+        timestamps — and keep logging into the same directory.  The
+        :class:`repro.durability.recovery.RecoveryInfo` lands on
+        ``db.recovery`` (DESIGN.md Sec 14)."""
+        from repro.durability.recovery import recover as _recover
+
+        return _recover(durable_dir, backend=backend, policy=policy,
+                        group_commit=group_commit)
+
+    # ------------------------------------------------------------ durability
+    def _attach_durability(self, durability) -> None:
+        self.executor.durability = durability
+
+    @property
+    def durability(self):
+        """The attached durability sidecar (None for a volatile client)."""
+        return getattr(self.executor, "durability", None)
+
+    def sync_durable(self) -> None:
+        """Close the group-commit window: fsync every logged-but-pending
+        plan.  A no-op for a volatile client."""
+        dur = self.durability
+        if dur is not None:
+            dur.sync()
+
+    def checkpoint(self, *, delta: bool = True) -> int:
+        """Checkpoint the current store into the durable directory (delta
+        against the previous checkpoint when one exists — first save is
+        always full) and prune WAL segments the checkpoint covers.
+        Returns the checkpoint step (the store clock)."""
+        dur = self.durability
+        if dur is None:
+            raise ValueError(
+                "checkpoint() requires a durable client "
+                "(Uruv(durable_dir=...) or Uruv.recover())")
+        return dur.checkpoint(
+            self._store, delta=delta,
+            compactions=self.executor.stats.get("compactions", 0))
 
     # ----------------------------------------------------------------- state
     @property
@@ -220,6 +277,15 @@ class Uruv:
             self._store = pending.rollback_store()
             return None
         base = int(np.asarray(pending.store_after.ts)) - len(pending.batch)
+        dur = self.durability
+        if dur is not None:
+            # log-on-confirm (the pipelined half of confirm-after-fsync):
+            # an ACCEPTED plan is logged here, before its Result exists; a
+            # rejected plan is never logged — its replay logs through
+            # apply(), so the WAL carries exactly one record per base_ts
+            dur.log_plan(base, np.asarray(pending.batch.codes),
+                         np.asarray(pending.batch.keys),
+                         np.asarray(pending.batch.values))
         values = np.asarray(pending.values)[:pending.n_user]
         return make_result(values,
                            np.asarray(pending.batch.codes)[:pending.n_user],

@@ -89,6 +89,11 @@ class LocalExecutor:
         self.policy = policy if policy is not None \
             else _lifecycle.DEFAULT_POLICY
         self.stats = _new_stats()
+        # durability sidecar (repro.durability.recovery.Durability),
+        # attached by Uruv(durable_dir=...) / Uruv.recover(): every
+        # committed plan is logged to the WAL before its result reaches
+        # the caller (DESIGN.md Sec 14)
+        self.durability = None
 
     # ------------------------------------------------------------- lifecycle
     def create(self):
@@ -126,6 +131,8 @@ class LocalExecutor:
     # ----------------------------------------------------------------- write
     def apply(self, store, batch: OpBatch, *, light_path: bool = True,
               range_opts: RangeOptions = RangeOptions()):
+        base = int(np.asarray(store.ts)) \
+            if self.durability is not None else 0
         store, values, range_pages = _batch.apply_mixed(
             store, batch.codes, batch.keys, batch.values,
             light_path=light_path, backend=self.backend,
@@ -135,6 +142,16 @@ class LocalExecutor:
             stats=self.stats, policy=self.policy,
         )
         store = self._lifecycle_tick(store)
+        if self.durability is not None and len(batch):
+            # log-on-commit: apply_mixed either applied the WHOLE plan or
+            # raised — a logged record is a committed plan, and it hits
+            # the WAL before the caller ever sees the result (the sync
+            # half of the confirm-after-fsync contract; the pipelined
+            # half is Uruv.confirm).  fsync cadence is the sidecar's
+            # group-commit window (1 = every plan).
+            self.durability.log_plan(
+                base, np.asarray(batch.codes), np.asarray(batch.keys),
+                np.asarray(batch.values))
         k2 = np.asarray(batch.values)
         range_items = [(pos, page, int(k2[pos])) for pos, page in range_pages]
         return store, values, range_items

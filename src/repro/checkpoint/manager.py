@@ -1,4 +1,4 @@
-"""MVCC snapshot checkpointing + elastic restore.
+"""MVCC snapshot checkpointing + elastic restore + delta checkpoints.
 
 The paper's snapshot semantics applied to training state (DESIGN.md Sec 3):
 
@@ -14,6 +14,19 @@ The paper's snapshot semantics applied to training state (DESIGN.md Sec 3):
   * GC      — superseded checkpoints are tombstoned in the index and files
     of unreferenced manifests removed, gated by the version tracker
     (a restore-in-progress registers a snapshot and blocks reclamation).
+
+Delta checkpoints (DESIGN.md Sec 14): a full ``save_store`` of a
+self-sized store (64k+ leaves) is unusable as a durability cadence, so
+``save_store_delta`` writes only what changed since the previous saved
+state — per-array changed ROWS for the leaf/index pools (row diff against
+the retained host copy of the last save) and the allocator TAIL for the
+version pool (append-only between compactions; the
+``repro.core.lifecycle.pool_watermarks`` fast path skips the diff
+entirely).  A delta manifest records ``base_step``; restore walks the
+chain back to the base full save and replays the deltas forward.  GC
+never drops a base that a kept delta still references, and
+``_load_existing`` registers only steps whose chain is complete (and
+removes ``.tmp_step_*`` wreckage a crashed async writer left behind).
 """
 
 from __future__ import annotations
@@ -30,7 +43,11 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 import jax
 
-from repro.api import KEY_DOMAIN_HI, Uruv, UruvConfig
+from repro.api import (
+    KEY_DOMAIN_HI, PoolWatermarks, Uruv, UruvConfig,
+    pool_watermarks, version_tail_start,
+)
+from repro.distributed.fault import crash_point
 
 
 def _flatten(tree) -> List[Tuple[str, Any]]:
@@ -44,6 +61,15 @@ def _flatten(tree) -> List[Tuple[str, Any]]:
     return out
 
 
+# version-pool arrays whose slots below the allocator watermark are
+# immutable between compactions (lifecycle.version_tail_start)
+_VER_TAIL_ARRAYS = ("ver_value", "ver_ts", "ver_next")
+
+# row-delta sparsity cutoff: past this changed-row fraction a full array
+# write is smaller than idx + rows
+_DELTA_FULL_FRAC = 0.5
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3, async_write: bool = True):
         self.dir = Path(directory)
@@ -54,6 +80,11 @@ class CheckpointManager:
             UruvConfig(leaf_cap=16, max_leaves=512, max_versions=1 << 14)
         )
         self._pending: Optional[threading.Thread] = None
+        # host copy + watermarks of the last save_store/save_store_delta —
+        # the diff base for the next delta (process-local by design: a
+        # fresh manager starts a fresh chain with a full save)
+        self._delta_base: Optional[Tuple[int, Dict[str, np.ndarray]]] = None
+        self._delta_marks: Optional[PoolWatermarks] = None
         self._load_existing()
 
     # ------------------------------------------------------------------ save
@@ -63,28 +94,50 @@ class CheckpointManager:
         host = jax.tree.map(np.asarray, jax.device_get(state))
 
         def write():
-            man_dir = self.dir / f"step_{step:08d}"
-            tmp = self.dir / f".tmp_step_{step:08d}"
-            if tmp.exists():
-                shutil.rmtree(tmp)
-            tmp.mkdir()
             manifest = {"step": step, "leaves": [], **(extra or {})}
-            for name, leaf in _flatten(host):
-                fn = name.replace("/", "__") + ".npy"
-                np.save(tmp / fn, leaf)
-                manifest["leaves"].append(
-                    {"name": name, "file": fn,
-                     "shape": list(np.shape(leaf)),
-                     "dtype": str(np.asarray(leaf).dtype)}
-                )
-            (tmp / "manifest.json").write_text(json.dumps(manifest))
-            if man_dir.exists():
-                shutil.rmtree(man_dir)
-            tmp.rename(man_dir)                   # atomic publish
-            # index insert: key = step, value = 1 (manifest id)
-            self.index.insert([step], [1])
-            self._gc()
+            with self._publish(step) as tmp:
+                for name, leaf in _flatten(host):
+                    fn = name.replace("/", "__") + ".npy"
+                    np.save(tmp / fn, leaf)
+                    manifest["leaves"].append(
+                        {"name": name, "file": fn, "mode": "full",
+                         "shape": list(np.shape(leaf)),
+                         "dtype": str(np.asarray(leaf).dtype)}
+                    )
+                (tmp / "manifest.json").write_text(json.dumps(manifest))
 
+        self._run_write(write)
+
+    def _publish(self, step: int):
+        """tmp-write -> atomic-rename -> index-insert -> GC, with the
+        battery's crash points on either side of the rename."""
+        mgr = self
+
+        class _Publish:
+            def __enter__(self):
+                self.man_dir = mgr.dir / f"step_{step:08d}"
+                self.tmp = mgr.dir / f".tmp_step_{step:08d}"
+                if self.tmp.exists():
+                    shutil.rmtree(self.tmp)
+                self.tmp.mkdir()
+                return self.tmp
+
+            def __exit__(self, exc_type, exc, tb):
+                if exc_type is not None:
+                    return False
+                crash_point("ckpt.tmp_written")
+                if self.man_dir.exists():
+                    shutil.rmtree(self.man_dir)
+                self.tmp.rename(self.man_dir)     # atomic publish
+                crash_point("ckpt.renamed")
+                # index insert: key = step, value = 1 (manifest id)
+                mgr.index.insert([step], [1])
+                mgr._gc()
+                return False
+
+        return _Publish()
+
+    def _run_write(self, write) -> None:
         if self.async_write:
             self._pending = threading.Thread(target=write, daemon=True)
             self._pending.start()
@@ -104,6 +157,43 @@ class CheckpointManager:
         steps = [k for k, v in items if v == 1]
         return max(steps) if steps else None
 
+    def _manifest(self, step: int) -> Dict[str, Any]:
+        man_path = self.dir / f"step_{step:08d}" / "manifest.json"
+        if not man_path.exists():
+            raise FileNotFoundError(f"no complete checkpoint at step {step}")
+        return json.loads(man_path.read_text())
+
+    def _host_leaves(self, step: int) -> Dict[str, np.ndarray]:
+        """Materialize the saved host arrays at ``step``, replaying the
+        delta chain back to its base full save (DESIGN.md Sec 14)."""
+        manifest = self._manifest(step)
+        man_dir = self.dir / f"step_{step:08d}"
+        if manifest.get("kind") != "delta":
+            return {
+                rec["name"]: np.load(man_dir / rec["file"])
+                for rec in manifest["leaves"]
+            }
+        out = self._host_leaves(manifest["base_step"])
+        for rec in manifest["leaves"]:
+            name, mode = rec["name"], rec["mode"]
+            if mode == "same":
+                continue
+            if mode == "full":
+                out[name] = np.load(man_dir / rec["file"])
+            elif mode == "rows":
+                with np.load(man_dir / rec["file"]) as z:
+                    idx, rows = z["idx"], z["rows"]
+                arr = out[name].copy()
+                arr[idx] = rows
+                out[name] = arr
+            else:
+                raise ValueError(f"unknown delta mode {mode!r} for {name}")
+            if list(out[name].shape) != rec["shape"]:
+                raise ValueError(
+                    f"delta chain shape mismatch for {name}: "
+                    f"{list(out[name].shape)} != {rec['shape']}")
+        return out
+
     def restore(self, like, step: Optional[int] = None,
                 shardings=None):
         """Restore into the structure of ``like`` (a pytree of arrays or
@@ -114,15 +204,9 @@ class CheckpointManager:
             step = self.latest_step()
         if step is None:
             raise FileNotFoundError("no complete checkpoint found")
-        man_dir = self.dir / f"step_{step:08d}"
-        manifest = json.loads((man_dir / "manifest.json").read_text())
-        by_name = {l["name"]: l for l in manifest["leaves"]}
-
+        by_name = self._host_leaves(step)
         names = [n for n, _ in _flatten(like)]
-        leaves = []
-        for name in names:
-            rec = by_name[name]
-            leaves.append(np.load(man_dir / rec["file"]))
+        leaves = [by_name[name] for name in names]
         treedef = jax.tree_util.tree_structure(like)
         host_tree = jax.tree_util.tree_unflatten(treedef, leaves)
         if shardings is not None:
@@ -134,32 +218,120 @@ class CheckpointManager:
         return host_tree, step
 
     # ------------------------------------------------- store-aware round-trip
-    def save_store(self, store, step: int) -> None:
+    def _store_extra(self, store) -> Dict[str, Any]:
+        cfg = store.cfg
+        shards = int(np.asarray(store.ts).shape[0]) \
+            if np.asarray(store.ts).ndim else 0
+        return {
+            "uruv_config": dataclasses.asdict(cfg),
+            "uruv_shards": shards,
+            "uruv_ts": int(np.asarray(store.ts).max()),
+        }
+
+    def save_store(self, store, step: int, *, compactions: int = 0) -> None:
         """Checkpoint an UruvStore (local or stacked/sharded) with its LIVE
         capacities recorded in the manifest, so :meth:`restore_store`
         round-trips across lifecycle growth — a store that grew from 4K to
         64K leaves restores with exactly its grown shapes, no ``like``
-        template required (DESIGN.md Sec 10)."""
-        cfg = store.cfg
-        shards = int(np.asarray(store.ts).shape[0]) \
-            if np.asarray(store.ts).ndim else 0
-        self.save(store, step, extra={
-            "uruv_config": dataclasses.asdict(cfg),
-            "uruv_shards": shards,
-        })
+        template required (DESIGN.md Sec 10).  Also (re)bases the delta
+        chain: the retained host copy is what the next
+        :meth:`save_store_delta` diffs against."""
+        host = jax.tree.map(np.asarray, jax.device_get(store))
+        self._delta_base = (step, dict(_flatten(host)))
+        self._delta_marks = pool_watermarks(
+            store, compactions=compactions)
+        self.save(host, step, extra=self._store_extra(store))
+
+    def save_store_delta(self, store, step: int, *,
+                         compactions: int = 0) -> Dict[str, int]:
+        """Checkpoint only what changed since the last ``save_store`` /
+        ``save_store_delta`` in this manager (DESIGN.md Sec 14).
+
+        Per array: ``same`` (bit-identical — nothing written), ``rows``
+        (changed rows scattered by index; the version pool skips the diff
+        via the ``lifecycle.version_tail_start`` watermark), or ``full``
+        (0-d scalars, shape changes after ``grow``, or diffs too dense
+        for a sparse win).  Returns per-mode array counts (the bench
+        reads write bytes off the published directory).  Requires a base:
+        call :meth:`save_store` first."""
+        if self._delta_base is None:
+            raise ValueError(
+                "save_store_delta requires a prior save_store in this "
+                "manager (the delta chain needs a base full save)")
+        self.wait()
+        base_step, base = self._delta_base
+        host = jax.tree.map(np.asarray, jax.device_get(store))
+        flat = _flatten(host)
+        tail_start = version_tail_start(
+            self._delta_marks, store, compactions=compactions) \
+            if self._delta_marks is not None else None
+        n_vers = int(np.asarray(host.n_vers).max())
+
+        entries: List[Tuple[Dict[str, Any], Optional[Any]]] = []
+        counts = {"same": 0, "rows": 0, "full": 0}
+        for name, leaf in flat:
+            arr = np.asarray(leaf)
+            rec = {"name": name, "shape": list(arr.shape),
+                   "dtype": str(arr.dtype)}
+            old = base.get(name)
+            mode, payload = "full", arr
+            if old is not None and old.shape == arr.shape:
+                if arr.ndim and name in _VER_TAIL_ARRAYS \
+                        and tail_start is not None:
+                    # append-only pool: the delta IS the allocator tail
+                    idx = np.arange(tail_start, n_vers, dtype=np.int64)
+                    mode, payload = "rows", (idx, arr[tail_start:n_vers])
+                elif arr.ndim == 0:
+                    mode = "same" if old == arr else "full"
+                    payload = None if mode == "same" else arr
+                else:
+                    diff = old != arr
+                    changed = np.flatnonzero(
+                        diff.reshape(arr.shape[0], -1).any(axis=1))
+                    if changed.size == 0:
+                        mode, payload = "same", None
+                    elif changed.size <= _DELTA_FULL_FRAC * arr.shape[0]:
+                        mode, payload = "rows", (changed, arr[changed])
+            rec["mode"] = mode
+            counts[mode] += 1
+            entries.append((rec, payload))
+
+        self._delta_base = (step, dict(flat))
+        self._delta_marks = pool_watermarks(
+            store, compactions=compactions)
+        manifest = {"step": step, "kind": "delta", "base_step": base_step,
+                    "leaves": [], **self._store_extra(store)}
+
+        def write():
+            with self._publish(step) as tmp:
+                for rec, payload in entries:
+                    if rec["mode"] == "full":
+                        fn = rec["name"].replace("/", "__") + ".npy"
+                        np.save(tmp / fn, payload)
+                        rec["file"] = fn
+                    elif rec["mode"] == "rows":
+                        fn = rec["name"].replace("/", "__") + ".npz"
+                        idx, rows = payload
+                        np.savez(tmp / fn, idx=idx, rows=rows)
+                        rec["file"] = fn
+                    manifest["leaves"].append(rec)
+                (tmp / "manifest.json").write_text(json.dumps(manifest))
+
+        self._run_write(write)
+        return counts
 
     def restore_store(self, step: Optional[int] = None, shardings=None):
-        """Rebuild the UruvStore saved by :meth:`save_store`: the manifest's
-        recorded ``UruvConfig`` regenerates the exact (possibly grown)
-        template, elastic across meshes via ``shardings`` as in
-        :meth:`restore`.  Returns ``(store, step)``."""
+        """Rebuild the UruvStore saved by :meth:`save_store` (or a
+        :meth:`save_store_delta` chain): the manifest's recorded
+        ``UruvConfig`` regenerates the exact (possibly grown) template,
+        elastic across meshes via ``shardings`` as in :meth:`restore`.
+        Returns ``(store, step)``."""
         self.wait()
         if step is None:
             step = self.latest_step()
         if step is None:
             raise FileNotFoundError("no complete checkpoint found")
-        man_dir = self.dir / f"step_{step:08d}"
-        manifest = json.loads((man_dir / "manifest.json").read_text())
+        manifest = self._manifest(step)
         if "uruv_config" not in manifest:
             raise ValueError(
                 f"checkpoint step {step} was not written by save_store"
@@ -176,12 +348,38 @@ class CheckpointManager:
             )
         return self.restore(like, step, shardings=shardings)
 
+    def store_ts(self, step: Optional[int] = None) -> int:
+        """The clock recorded at a ``save_store*`` step (manifest field —
+        no array loads); recovery prunes WAL segments below it."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError("no complete checkpoint found")
+        return int(self._manifest(step)["uruv_ts"])
+
     # -------------------------------------------------------------------- gc
+    def _chain(self, step: int) -> List[int]:
+        """``step`` plus every base it transitively needs (innermost last);
+        raises FileNotFoundError when a link is missing."""
+        out = [step]
+        manifest = self._manifest(step)
+        while manifest.get("kind") == "delta":
+            step = int(manifest["base_step"])
+            out.append(step)
+            manifest = self._manifest(step)
+        return out
+
     def _gc(self) -> None:
         with self.index.snapshot() as snap:
             items = self.index.range(0, KEY_DOMAIN_HI, snap)
         steps = sorted(k for k, v in items if v == 1)
-        drop = steps[: -self.keep] if self.keep else []
+        kept = steps[-self.keep:] if self.keep else steps
+        # a delta's base chain must outlive it — never drop a step a kept
+        # delta still restores through
+        required = set(kept)
+        for s in kept:
+            required.update(self._chain(s))
+        drop = [s for s in steps if s not in required]
         if drop:
             self.index.delete(np.array(drop, np.int32))
             self.index.compact()
@@ -191,10 +389,22 @@ class CheckpointManager:
                     shutil.rmtree(d)
 
     def _load_existing(self) -> None:
+        # a crashed async writer leaves .tmp_step_* behind; left in place
+        # they leak forever (nothing ever rmtree's a tmp dir whose step is
+        # never saved again) — scrub them before anything else
+        for tmp in self.dir.glob(".tmp_step_*"):
+            shutil.rmtree(tmp)
         steps = []
         for d in self.dir.glob("step_*"):
             if (d / "manifest.json").exists():
                 steps.append(int(d.name.split("_")[1]))
-        if steps:
-            arr = np.array(sorted(steps), np.int32)
+        complete = []
+        for s in sorted(steps):
+            try:
+                self._chain(s)              # every delta link must resolve
+            except FileNotFoundError:
+                continue
+            complete.append(s)
+        if complete:
+            arr = np.array(complete, np.int32)
             self.index.insert(arr, np.ones_like(arr))

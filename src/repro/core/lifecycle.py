@@ -380,6 +380,71 @@ def maintain(
 
 
 # ---------------------------------------------------------------------------
+# Per-pool dirty watermarks (delta checkpoints, DESIGN.md Sec 14)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PoolWatermarks:
+    """Host snapshot of the pool allocators at one clock value.
+
+    The delta-checkpoint writer (``repro.checkpoint.manager``) compares
+    two of these to decide what can be skipped without reading it:
+    ``grow`` only tail-extends (pow2 buckets, prefixes bit-exact) and the
+    version pool is a bump allocator that structural passes never rewrite
+    except :func:`repro.core.store.compact` — so between saves with no
+    compaction, version slots below the older ``n_vers`` are immutable
+    and the delta is exactly the tail slice.  ``compactions`` is the
+    caller-supplied pass counter (``Uruv.stats``) that invalidates that
+    reasoning when it moves.
+    """
+
+    ts: int
+    n_alloc: int
+    n_vers: int
+    n_leaves: int
+    max_leaves: int
+    max_versions: int
+    tracker_cap: int
+    compactions: int = 0
+
+
+def pool_watermarks(store: S.UruvStore, *,
+                    compactions: int = 0) -> PoolWatermarks:
+    """Read the allocator watermarks (one host transfer; sharded stores
+    report per-shard maxima — the tail fast path below then disables
+    itself, see :func:`version_tail_start`)."""
+    ts, n_alloc, n_vers, n_leaves = jax.device_get(
+        (store.ts, store.n_alloc, store.n_vers, store.n_leaves))
+    return PoolWatermarks(
+        ts=int(np.asarray(ts).max()),
+        n_alloc=int(np.asarray(n_alloc).max()),
+        n_vers=int(np.asarray(n_vers).max()),
+        n_leaves=int(np.asarray(n_leaves).max()),
+        max_leaves=int(store.cfg.max_leaves),
+        max_versions=int(store.cfg.max_versions),
+        tracker_cap=int(store.cfg.tracker_cap),
+        compactions=compactions,
+    )
+
+
+def version_tail_start(before: PoolWatermarks, store: S.UruvStore, *,
+                       compactions: int = 0) -> Optional[int]:
+    """The append-only fast path for delta checkpoints: the first version
+    slot that may differ from the state ``before`` describes, or ``None``
+    when tail stability cannot be guaranteed (a compaction ran, the pool
+    is stacked/sharded, or the allocator moved backwards) and the writer
+    must fall back to a full row diff."""
+    if compactions != before.compactions:
+        return None
+    if np.asarray(store.ts).ndim:          # stacked: per-shard allocators
+        return None
+    n_vers = int(np.asarray(store.n_vers))
+    if n_vers < before.n_vers:
+        return None
+    return before.n_vers
+
+
+# ---------------------------------------------------------------------------
 # Host-side occupancy accounting + triggers
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,27 @@
+"""Durability: write-ahead announce log + delta checkpoints + recovery.
+
+The announce array is already a replayable record: every committed plan
+is `(base_ts, codes, keys, values)` and the store's `op_ts` plumbing
+makes re-application at the original timestamps bit-exact (the same
+property that makes sharded == local).  This package turns that into a
+durability story (DESIGN.md Sec 14):
+
+  * :mod:`repro.durability.wal` — append-only CRC-framed segments with
+    fsync-bounded group commit and torn-tail detection-and-truncate.
+  * :mod:`repro.durability.recovery` — the `Durability` sidecar the
+    ``repro.api`` executors log through, and :func:`recover`: restore
+    the last complete checkpoint (full or base+delta chain, see
+    ``repro.checkpoint.manager``) and replay the WAL tail at its
+    recorded timestamps.
+
+Everything on the replay path is deterministic by construction — no wall
+clock, no host RNG (gated by the ``determinism`` uruvlint rule, whose
+scope includes this package).
+"""
+
+from repro.durability.wal import (  # noqa: F401
+    Wal, WalCorruptionError, WalRecord, WalReport,
+)
+from repro.durability.recovery import (  # noqa: F401
+    Durability, WalReplayError, recover,
+)

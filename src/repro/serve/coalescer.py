@@ -228,9 +228,16 @@ class Coalescer:
         return False
 
     def flush(self) -> None:
-        """Dispatch everything queued and settle every in-flight plan."""
+        """Dispatch everything queued and settle every in-flight plan.
+
+        For a durable client this also closes the group-commit window:
+        with ``group_commit > 1`` up to that many confirmed plans may be
+        awaiting one shared fsync (the bounded relaxation of the
+        confirm-after-fsync contract, DESIGN.md Sec 14) — after flush
+        every released result is on disk."""
         while self.queue or self.inflight:
             self.pump(force=True)
+        self.db.sync_durable()
         self.db.lifecycle_tick()
 
     def _take(self, width: int) -> List[_Queued]:

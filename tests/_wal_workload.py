@@ -1,0 +1,174 @@
+"""Shared deterministic workload for the durability battery.
+
+Imported by tests/test_wal_recovery.py AND executed as the crash-injected
+subprocess worker (``python -c "import _wal_workload; _wal_workload.worker_main()"``
+with ``PYTHONPATH`` including this directory).  Everything here is a pure
+function of the seed — the parent process rebuilds the exact plan stream
+the killed worker was applying and replays it on a volatile oracle.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+import numpy as np
+
+from repro.api import LifecyclePolicy, OpBatch, Uruv, UruvConfig
+from repro.core.ref import (
+    KEY_MAX, OP_DELETE, OP_INSERT, OP_NOP, OP_RANGE, OP_SEARCH, RefStore,
+)
+
+KEYSPACE = 120
+PROBE_KEYS = list(range(0, KEYSPACE, 3))
+
+# op-code mix per plan slot: (insert, delete, search, range)
+MIXES: Dict[str, tuple] = {
+    "update": (0.60, 0.25, 0.10, 0.05),
+    "read": (0.30, 0.05, 0.45, 0.20),
+    "range": (0.35, 0.10, 0.10, 0.45),
+}
+
+
+def small_config() -> UruvConfig:
+    """Small enough that the battery workloads cross grow() boundaries."""
+    return UruvConfig(leaf_cap=8, max_leaves=16, max_versions=128,
+                      tracker_cap=8)
+
+
+def policy(maintain: bool) -> LifecyclePolicy:
+    """auto_grow always (growth boundaries are battery targets);
+    auto_maintain only for the result-level cases, and version GC off
+    (version_gc_fraction > 1 means capacity pressure always grows the
+    pool) — maintenance and compaction may reclaim versions below the
+    snapshot floor, so full historical-replay equality against RefStore
+    (which never reclaims) needs both off."""
+    return LifecyclePolicy(auto_grow=True, auto_maintain=maintain,
+                           version_gc_fraction=2.0)
+
+
+def make_plans(seed: int, n_plans: int, width: int,
+               mix: str) -> List[OpBatch]:
+    rng = np.random.default_rng(seed)
+    p = MIXES[mix]
+    plans = []
+    for _ in range(n_plans):
+        r = rng.random(width)
+        codes = np.full(width, OP_SEARCH, np.int32)
+        codes[r < p[0]] = OP_INSERT
+        codes[(r >= p[0]) & (r < p[0] + p[1])] = OP_DELETE
+        codes[r >= 1.0 - p[3]] = OP_RANGE
+        keys = rng.integers(0, KEYSPACE, width).astype(np.int32)
+        values = np.where(
+            codes == OP_INSERT,
+            rng.integers(1, 100000, width), 0).astype(np.int32)
+        is_rng = codes == OP_RANGE
+        values[is_rng] = keys[is_rng] + rng.integers(0, 30, width)[is_rng]
+        plans.append(OpBatch(codes, keys, values))
+    return plans
+
+
+# ---------------------------------------------------------------------------
+# result-level summaries (what recovered must match)
+# ---------------------------------------------------------------------------
+
+def sample_ts(ts: int) -> List[int]:
+    step = max(1, ts // 16)
+    return sorted(set(list(range(0, ts + 1, step)) + [ts]))
+
+
+def summarize(db: Uruv, *, historical: bool = True) -> dict:
+    """Result-level fingerprint: live items, probe lookups at the current
+    clock, and (``historical``) probe lookups at sampled past snapshots —
+    equal lookups at two clock values pin the version timestamps between
+    them, so matching fingerprints mean bit-identical values AND version
+    timestamps, not just a matching final state."""
+    ts = db.ts
+    out = {
+        "ts": ts,
+        "items": [[int(k), int(v)] for k, v in db.live_items()],
+        "now": db.lookup(PROBE_KEYS, ts).tolist(),
+    }
+    if historical:
+        out["hist"] = [[t, db.lookup(PROBE_KEYS, t).tolist()]
+                       for t in sample_ts(ts)]
+    return out
+
+
+def ref_summary(plans: List[OpBatch], n_applied: int, *,
+                historical: bool = True) -> dict:
+    """The same fingerprint computed by the pure-python RefStore replay."""
+    ref = RefStore()
+    for plan in plans[:n_applied]:
+        ref.apply_batch(list(zip(np.asarray(plan.codes).tolist(),
+                                 np.asarray(plan.keys).tolist(),
+                                 np.asarray(plan.values).tolist())))
+    ts = ref.ts
+    out = {
+        "ts": ts,
+        "items": [[k, v] for k, v in ref.range_query(0, KEY_MAX - 2, ts)],
+        "now": [ref.search_at(k, ts) for k in PROBE_KEYS],
+    }
+    if historical:
+        out["hist"] = [[t, [ref.search_at(k, t) for k in PROBE_KEYS]]
+                       for t in sample_ts(ts)]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the crash-injected worker
+# ---------------------------------------------------------------------------
+
+def ack_path(durable_dir: str) -> str:
+    return os.path.join(durable_dir, "acked")
+
+
+def read_acked(durable_dir: str) -> int:
+    try:
+        with open(ack_path(durable_dir)) as f:
+            return int(f.read())
+    except FileNotFoundError:
+        return 0
+
+
+def _ack(durable_dir: str, n: int) -> None:
+    tmp = ack_path(durable_dir) + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(str(n))
+    os.replace(tmp, ack_path(durable_dir))
+
+
+def worker_main() -> None:
+    """Apply the seeded plan stream against a durable client, acking each
+    confirmed plan; dies by SIGKILL wherever ``URUV_CRASH_POINT`` says.
+    Resumes via ``Uruv.recover`` when the directory already has history
+    (the clock is the plan cursor: every plan has one fixed width)."""
+    d = os.environ["URUV_W_DIR"]
+    seed = int(os.environ["URUV_W_SEED"])
+    n_plans = int(os.environ["URUV_W_PLANS"])
+    width = int(os.environ["URUV_W_WIDTH"])
+    mix = os.environ["URUV_W_MIX"]
+    ckpt_every = int(os.environ.get("URUV_W_CKPT", "0"))
+    maintain = os.environ.get("URUV_W_MAINTAIN", "0") == "1"
+    maintain_every = int(os.environ.get("URUV_W_MAINTAIN_EVERY", "0"))
+
+    plans = make_plans(seed, n_plans, width, mix)
+    if os.path.exists(os.path.join(d, "uruv.json")):
+        db = Uruv.recover(d, policy=policy(maintain))
+    else:
+        db = Uruv(small_config(), durable_dir=d, policy=policy(maintain))
+    assert db.ts % width == 0, (db.ts, width)
+    for i in range(db.ts // width, n_plans):
+        db.apply(plans[i])
+        _ack(d, i + 1)
+        if ckpt_every and (i + 1) % ckpt_every == 0:
+            db.checkpoint()
+        if maintain_every and (i + 1) % maintain_every == 0:
+            db.maintain()
+    db.durability.close()
+    print(json.dumps({"done": True, "ts": db.ts}))
+
+
+if __name__ == "__main__":
+    worker_main()

@@ -250,6 +250,25 @@ def test_determinism_scope_is_core_only():
     assert lint(DeterminismRule(), ("benchmarks/run2.py", src)) == []
 
 
+def test_determinism_covers_durability_replay_path():
+    # the WAL replay path is a deterministic-by-construction contract
+    # (DESIGN.md Sec 14): wall clock / host RNG fire there too
+    path, src = BAD_DETERMINISM
+    fs = lint(DeterminismRule(), ("src/repro/durability/wal2.py", src))
+    assert rule_ids(fs) == ["determinism"] and len(fs) >= 3
+
+
+def test_determinism_os_urandom_fires_but_os_io_ok():
+    fs = lint(DeterminismRule(), ("src/repro/durability/wal2.py", """
+        import os
+        def seg_id(f):
+            os.fsync(f.fileno())           # durable I/O is fine
+            return os.urandom(8)           # entropy is not
+    """))
+    assert rule_ids(fs) == ["determinism"]
+    assert len(fs) == 1 and "os.urandom" in fs[0].message
+
+
 def test_determinism_jax_random_ok():
     assert lint(DeterminismRule(), ("src/repro/core/batch2.py", """
         import jax

@@ -1,0 +1,414 @@
+"""The durability battery (DESIGN.md Sec 14).
+
+kill -9 crash points -> fresh-process recovery -> result-level
+bit-equality against an uninterrupted oracle:
+
+  * subprocess workers apply a seeded plan stream against a durable
+    client and are SIGKILLed at randomized crash points (mid-WAL-append,
+    pre/post fsync, between checkpoint tmp-write and rename, between
+    rename and GC) via ``repro.distributed.fault.crash_point``;
+  * the parent (a fresh process w.r.t. the kill) recovers the directory
+    and must land on a prefix of the plan stream that (a) covers every
+    acked plan and (b) matches the RefStore/volatile-oracle replay of
+    exactly that prefix — values, found masks, AND version timestamps
+    (historical lookups at sampled snapshots pin them);
+  * the recovered client then finishes the workload and must equal the
+    full-run oracle — recovery is a working client, not a read-only view.
+
+Plus the torn-record corpus (truncated tails, bit-flipped CRCs,
+duplicate records, duplicated segment files), the recovery property
+test across MTASet-style op mixes with growth-boundary crashes, and the
+``.tmp_step_*`` leak regression for CheckpointManager.
+"""
+
+import json
+import os
+import shutil
+import signal
+import subprocess
+import sys
+import zlib
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import _wal_workload as W
+from repro.api import LifecyclePolicy, OpBatch, Uruv, UruvConfig
+from repro.checkpoint.manager import CheckpointManager
+from repro.durability import (
+    Durability, Wal, WalCorruptionError, WalReplayError, recover,
+)
+from repro.durability.wal import REC_HEADER, PAY_HEADER
+from repro.durability.recovery import replay
+
+TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
+
+
+def worker_env(durable_dir, *, seed, n_plans, width, mix, ckpt=0,
+               crash=None, maintain=False, maintain_every=0):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [env.get("PYTHONPATH", ""), TESTS_DIR])
+    env.update({
+        "URUV_W_DIR": str(durable_dir), "URUV_W_SEED": str(seed),
+        "URUV_W_PLANS": str(n_plans), "URUV_W_WIDTH": str(width),
+        "URUV_W_MIX": mix, "URUV_W_CKPT": str(ckpt),
+        "URUV_W_MAINTAIN": "1" if maintain else "0",
+        "URUV_W_MAINTAIN_EVERY": str(maintain_every),
+    })
+    env.pop("URUV_CRASH_POINT", None)
+    if crash is not None:
+        env["URUV_CRASH_POINT"] = crash
+    return env
+
+
+def run_worker(env, *, expect_kill):
+    p = subprocess.run(
+        [sys.executable, "-c",
+         "import _wal_workload; _wal_workload.worker_main()"],
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+    if expect_kill:
+        assert p.returncode == -signal.SIGKILL, \
+            f"worker survived its crash point: rc={p.returncode}\n{p.stderr}"
+    else:
+        assert p.returncode == 0, p.stderr
+    return p
+
+
+# ---------------------------------------------------------------------------
+# the kill -9 battery
+# ---------------------------------------------------------------------------
+
+# (crash selector, checkpoint cadence) — the :k suffix randomizes WHEN the
+# kill lands (k-th hit) without randomizing the code path; cadence 4 with
+# 12 plans makes the ckpt.* points hit the FULL save (first hit) and the
+# DELTA save (:2 — the chain publish is its own crash surface)
+BATTERY = [
+    ("wal.mid_append:2", 0),
+    ("wal.mid_append:7", 4),
+    ("wal.pre_fsync:9", 4),
+    ("wal.post_fsync:3", 0),
+    ("wal.post_fsync:10", 4),
+    ("ckpt.tmp_written", 4),
+    ("ckpt.tmp_written:2", 4),
+    ("ckpt.renamed", 4),
+    ("ckpt.renamed:2", 4),
+]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("crash,ckpt", BATTERY,
+                         ids=[c for c, _ in BATTERY])
+def test_kill9_battery(tmp_path, crash, ckpt):
+    seed, n_plans, width, mix = 7, 12, 16, "update"
+    env = worker_env(tmp_path, seed=seed, n_plans=n_plans, width=width,
+                     mix=mix, ckpt=ckpt, crash=crash)
+    run_worker(env, expect_kill=True)
+
+    plans = W.make_plans(seed, n_plans, width, mix)
+    acked = W.read_acked(tmp_path)
+    db = Uruv.recover(tmp_path, policy=W.policy(False))
+    assert db.ts % width == 0
+    m = db.ts // width
+    # the durability invariant: everything acked survived the kill
+    assert acked <= m <= n_plans, (acked, m)
+    assert db.recovery.replayed_plans + (0 if db.recovery.checkpoint_step
+                                         is None else
+                                         db.recovery.checkpoint_step
+                                         // width) == m
+    assert W.summarize(db) == W.ref_summary(plans, m)
+    db.durability.close()
+
+    # a recovered directory is a working store: finish the workload in a
+    # second (resuming) worker process, recover again, compare full run
+    run_worker(worker_env(tmp_path, seed=seed, n_plans=n_plans, width=width,
+                          mix=mix, ckpt=ckpt), expect_kill=False)
+    db2 = Uruv.recover(tmp_path, policy=W.policy(False))
+    assert db2.ts == n_plans * width
+    assert W.summarize(db2) == W.ref_summary(plans, n_plans)
+    db2.durability.close()
+
+
+def test_mid_append_tear_is_truncated_byte_exactly(tmp_path):
+    """Dying mid-append leaves exactly half a record; open() must report
+    precisely those bytes and the next open must be clean."""
+    seed, n_plans, width, mix = 11, 8, 16, "update"
+    env = worker_env(tmp_path, seed=seed, n_plans=n_plans, width=width,
+                     mix=mix, crash="wal.mid_append:5")
+    run_worker(env, expect_kill=True)
+
+    db = Uruv.recover(tmp_path, policy=W.policy(False))
+    rep = db.recovery.wal
+    rec_bytes = REC_HEADER.size + PAY_HEADER.size + 12 * width
+    assert rep.torn_tail
+    assert rep.truncated_bytes == rec_bytes // 2
+    assert rep.truncated_segment == "wal_00000001.log"
+    assert db.ts // width == 4          # plans 1-4 survived, 5 was torn
+    db.durability.close()
+
+    db2 = Uruv.recover(tmp_path, policy=W.policy(False))
+    assert not db2.recovery.wal.torn_tail
+    assert db2.recovery.wal.truncated_bytes == 0
+    db2.durability.close()
+
+
+def test_group_commit_crash_loses_at_most_window(tmp_path):
+    """group_commit=k: an un-fsynced window may die, but never an fsynced
+    plan — and a flushed coalescer (confirm-after-fsync) never loses."""
+    cfg = W.small_config()
+    db = Uruv(cfg, durable_dir=tmp_path, group_commit=4)
+    db.insert([1, 2, 3], [10, 20, 30])       # plan 1: window pending
+    db.insert([4], [40])                      # plan 2: still pending
+    assert db.durability.wal.pending == 2
+    db.sync_durable()                         # the coalescer-flush fsync
+    db.insert([5], [50])                      # pending again, "crash" here
+    assert db.durability.wal.pending == 1
+    # simulate the kill: drop the client without close() — the pending
+    # record was appended but never fsynced (it MAY survive the page
+    # cache; the contract only promises synced plans)
+    del db
+    db2 = Uruv.recover(tmp_path, group_commit=4)
+    assert db2.ts >= 4                        # everything fsynced survived
+    assert db2.lookup([1, 2, 3, 4], db2.ts).tolist() == [10, 20, 30, 40]
+    db2.durability.close()
+
+
+# ---------------------------------------------------------------------------
+# recovery property test: op mixes x growth/maintain boundary crashes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mix", sorted(W.MIXES))
+@pytest.mark.parametrize("seed", [1, 2])
+def test_recovery_property(tmp_path, mix, seed):
+    """Seeded CRUD+range interleavings, killed mid-WAL-append at a
+    seed-randomized plan, recovered and compared against the RefStore
+    replay of the recovered prefix — values AND version timestamps
+    (historical probes).  The workload is sized to cross grow()
+    boundaries (asserted on the oracle client)."""
+    n_plans, width = 18, 12
+    k = 5 + (seed * 7 + len(mix)) % 9        # randomized crash plan
+    env = worker_env(tmp_path, seed=seed, n_plans=n_plans, width=width,
+                     mix=mix, ckpt=6, crash=f"wal.mid_append:{k}")
+    run_worker(env, expect_kill=True)
+
+    plans = W.make_plans(seed, n_plans, width, mix)
+    acked = W.read_acked(tmp_path)
+    db = Uruv.recover(tmp_path, policy=W.policy(False))
+    m = db.ts // width
+    assert acked <= m <= n_plans
+    assert W.summarize(db) == W.ref_summary(plans, m)
+
+    # the write-heavy plan stream must cross a growth boundary on a
+    # volatile oracle (the version pool overflows and auto-grows); the
+    # read/range mixes write too few versions to pressure the pools
+    oracle = Uruv(W.small_config(), policy=W.policy(False))
+    for p in plans:
+        oracle.apply(p)
+    if mix == "update":
+        assert oracle.stats["grows"] >= 1
+    db.durability.close()
+
+
+def test_recovery_across_maintain_boundary(tmp_path):
+    """Crashes interleaved with explicit maintain() passes: maintenance
+    is never WAL-logged (it changes no result), so recovery replays onto
+    a differently-maintained pool — results must still match the oracle
+    at the current clock, and a snapshot registered post-recovery must be
+    byte-stable under further maintenance."""
+    seed, n_plans, width, mix = 3, 16, 12, "update"
+    env = worker_env(tmp_path, seed=seed, n_plans=n_plans, width=width,
+                     mix=mix, ckpt=5, crash="wal.post_fsync:11",
+                     maintain=True, maintain_every=3)
+    run_worker(env, expect_kill=True)
+
+    plans = W.make_plans(seed, n_plans, width, mix)
+    db = Uruv.recover(tmp_path, policy=W.policy(True))
+    m = db.ts // width
+    assert W.read_acked(tmp_path) <= m <= n_plans
+    # result-level equality at the current clock (maintenance may have
+    # reclaimed versions below the snapshot floor, so no historical probe)
+    assert W.summarize(db, historical=False) == \
+        W.ref_summary(plans, m, historical=False)
+
+    # registered-snapshot byte-stability across post-recovery maintenance
+    with db.snapshot() as ts:
+        before = db.range(0, W.KEYSPACE, ts)
+        db.maintain()
+        db.compact()
+        assert db.range(0, W.KEYSPACE, ts) == before
+    db.durability.close()
+
+
+# ---------------------------------------------------------------------------
+# torn-record corpus (Wal-level, no subprocesses)
+# ---------------------------------------------------------------------------
+
+def _write_wal(directory, n_records=6, width=4, base=0):
+    wal = Wal.open(directory)
+    for i in range(n_records):
+        wal.append(base + i * width, np.zeros(width, np.int32),
+                   np.arange(width, dtype=np.int32) + i,
+                   np.full(width, i + 1, np.int32))
+        wal.commit()
+    wal.close()
+    return sorted(Path(directory).glob("wal_*.log"))
+
+
+@pytest.mark.parametrize("cut", [1, 44, 72, 100])
+def test_torn_tail_truncated_and_reported(tmp_path, cut):
+    [seg] = _write_wal(tmp_path / "wal")
+    size = seg.stat().st_size
+    with open(seg, "r+b") as f:
+        f.truncate(size - cut)
+    wal = Wal.open(tmp_path / "wal")
+    rec_bytes = REC_HEADER.size + PAY_HEADER.size + 12 * 4
+    hdr = 16                                        # segment header bytes
+    survive = (size - cut - hdr) // rec_bytes       # whole records left
+    assert wal.report.n_records == survive
+    assert wal.report.torn_tail == ((size - cut - hdr) % rec_bytes != 0)
+    assert wal.report.truncated_bytes == (size - cut - hdr) % rec_bytes
+    # after truncation the file is clean: reopen reports zero truncated
+    wal.close()
+    wal2 = Wal.open(tmp_path / "wal")
+    assert not wal2.report.torn_tail
+    assert wal2.report.n_records == survive
+    wal2.close()
+
+
+def test_bitflip_in_final_segment_truncates_from_there(tmp_path):
+    [seg] = _write_wal(tmp_path / "wal")
+    data = bytearray(seg.read_bytes())
+    rec_bytes = REC_HEADER.size + PAY_HEADER.size + 12 * 4
+    flip_at = 16 + 2 * rec_bytes + REC_HEADER.size + 3   # record 3 payload
+    data[flip_at] ^= 0x40
+    seg.write_bytes(bytes(data))
+    wal = Wal.open(tmp_path / "wal")
+    assert wal.report.n_records == 2                     # records 1-2 only
+    assert wal.report.torn_tail
+    assert wal.report.truncated_bytes == 4 * rec_bytes
+    wal.close()
+
+
+def test_bitflip_in_nonfinal_segment_is_rejected(tmp_path):
+    # tiny segment_bytes forces rotation -> multiple segments
+    wal = Wal.open(tmp_path / "wal", segment_bytes=128)
+    for i in range(8):
+        wal.append(i * 4, np.zeros(4, np.int32),
+                   np.arange(4, dtype=np.int32), np.full(4, i, np.int32))
+        wal.commit()
+    wal.close()
+    segs = sorted(Path(tmp_path / "wal").glob("wal_*.log"))
+    assert len(segs) >= 2
+    data = bytearray(segs[0].read_bytes())
+    data[-5] ^= 0x01                                     # corrupt EARLIER seg
+    segs[0].write_bytes(bytes(data))
+    with pytest.raises(WalCorruptionError):
+        Wal.open(tmp_path / "wal")
+
+
+def test_duplicate_records_skip_on_replay(tmp_path):
+    """A duplicate plan record (same base_ts appended twice — a re-logged
+    segment copy) parses fine and is skipped deterministically by the
+    next_ts <= clock rule; a GAP is rejected, never silently absorbed."""
+    wal = Wal.open(tmp_path / "wal")
+    wal.append(0, np.full(2, 0, np.int32), np.array([1, 2], np.int32),
+               np.array([10, 20], np.int32))
+    wal.append(0, np.full(2, 0, np.int32), np.array([1, 2], np.int32),
+               np.array([10, 20], np.int32))              # duplicate
+    wal.append(2, np.full(2, 0, np.int32), np.array([3, 4], np.int32),
+               np.array([30, 40], np.int32))
+    wal.commit()
+    db = Uruv(W.small_config())
+    assert replay(db, wal.records()) == 2                 # dup skipped
+    assert db.ts == 4
+    assert db.lookup([1, 2, 3, 4], db.ts).tolist() == [10, 20, 30, 40]
+
+    wal.append(99, np.full(2, 0, np.int32), np.array([5, 6], np.int32),
+               np.array([50, 60], np.int32))              # gap: base 99 != 4
+    with pytest.raises(WalReplayError):
+        replay(db, wal.records())
+    wal.close()
+
+
+def test_duplicated_segment_file_is_rejected(tmp_path):
+    """Copying a segment over another seq (an operator replaying backups)
+    makes the header's embedded seq disagree with the filename: open()
+    refuses it as corruption rather than replaying history twice."""
+    wal = Wal.open(tmp_path / "wal", segment_bytes=128)
+    for i in range(8):
+        wal.append(i * 4, np.zeros(4, np.int32),
+                   np.arange(4, dtype=np.int32), np.full(4, i, np.int32))
+        wal.commit()
+    wal.close()
+    segs = sorted(Path(tmp_path / "wal").glob("wal_*.log"))
+    assert len(segs) >= 3
+    shutil.copy(segs[0], segs[1])            # seq 1 contents under seq 2 name
+    with pytest.raises(WalCorruptionError):
+        Wal.open(tmp_path / "wal")
+
+
+def test_headerless_final_segment_is_unlinked(tmp_path):
+    [seg] = _write_wal(tmp_path / "wal")
+    nxt = seg.parent / "wal_00000002.log"
+    nxt.write_bytes(b"URUV")                 # died inside _open_segment
+    wal = Wal.open(tmp_path / "wal")
+    assert not nxt.exists()
+    assert wal.report.n_records == 6
+    wal.append(24, np.zeros(4, np.int32), np.zeros(4, np.int32),
+               np.zeros(4, np.int32))        # writer still appends cleanly
+    wal.commit()
+    wal.close()
+    assert Wal.open(tmp_path / "wal").report.n_records == 7
+
+
+# ---------------------------------------------------------------------------
+# checkpoint tmp-leak regression + delta-chain integrity
+# ---------------------------------------------------------------------------
+
+def test_tmp_step_leak_cleaned_on_open(tmp_path):
+    """REGRESSION: _load_existing never removed .tmp_step_* left by a
+    crashed async writer — pre-seed a torn tmp dir and require it gone."""
+    torn = tmp_path / ".tmp_step_00000005"
+    torn.mkdir()
+    (torn / "ts.npy").write_bytes(b"half a leaf")
+    mgr = CheckpointManager(tmp_path, async_write=False)
+    assert not torn.exists()
+    assert mgr.latest_step() is None         # junk never became a step
+
+    db = Uruv(W.small_config())
+    db.insert([1], [10])
+    mgr.save_store(db.store, 1)
+    assert mgr.latest_step() == 1            # normal saves still publish
+
+
+def test_delta_chain_survives_missing_base_rejection(tmp_path):
+    """A delta whose base chain is broken must not register as complete."""
+    db = Uruv(W.small_config())
+    db.insert([1, 2], [10, 20])
+    mgr = CheckpointManager(tmp_path, keep=5, async_write=False)
+    mgr.save_store(db.store, 2)
+    db.insert([3], [30])
+    mgr.save_store_delta(db.store, 3)
+    shutil.rmtree(tmp_path / "step_00000002")     # break the chain
+    mgr2 = CheckpointManager(tmp_path, keep=5, async_write=False)
+    assert mgr2.latest_step() is None
+
+
+def test_delta_gc_keeps_chain_bases(tmp_path):
+    db = Uruv(W.small_config())
+    db.insert([1], [10])
+    mgr = CheckpointManager(tmp_path, keep=1, async_write=False)
+    mgr.save_store(db.store, 1)
+    for s in (2, 3):
+        db.insert([s * 10], [s])
+        mgr.save_store_delta(db.store, s)
+    # keep=1 keeps only step 3 — but 3 is a delta chained to 2 chained to
+    # 1: every base must survive GC
+    assert sorted(int(p.name.split("_")[1])
+                  for p in tmp_path.glob("step_*")) == [1, 2, 3]
+    store, step = mgr.restore_store()
+    assert step == 3
+    assert Uruv.from_store(store).live_items() == db.live_items()
